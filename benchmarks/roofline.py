@@ -1,0 +1,48 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and prints per-(arch × shape × mesh):
+all three terms, dominant bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, and the
+roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load(dirname="experiments/dryrun"):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        r = d["roofline"]
+        rows.append(dict(
+            arch=d["arch"], shape=d["shape"],
+            mesh="multi" if "pod" in d["mesh"] else "single",
+            chips=d["chips"],
+            compute_ms=round(r["compute_s"] * 1e3, 3),
+            memory_ms=round(r["memory_s"] * 1e3, 3),
+            collective_ms=round(r["collective_s"] * 1e3, 3),
+            dominant=r["dominant"],
+            useful_flops=round(r["useful_flops_frac"], 3),
+            roofline_frac=round(r["roofline_frac"], 4),
+            mem_gib=round(d["memory"]["peak_bytes_per_device"] / 2**30, 2),
+        ))
+    return rows
+
+
+def main(argv=()):
+    rows = load()
+    print("arch,shape,mesh,chips,compute_ms,memory_ms,collective_ms,"
+          "dominant,useful_flops,roofline_frac,mem_gib")
+    for r in rows:
+        print(",".join(str(r[k]) for k in
+                       ("arch", "shape", "mesh", "chips", "compute_ms",
+                        "memory_ms", "collective_ms", "dominant",
+                        "useful_flops", "roofline_frac", "mem_gib")))
+    return rows
+
+
+if __name__ == "__main__":
+    main()

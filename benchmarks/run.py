@@ -1,0 +1,118 @@
+"""Benchmark driver — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV summary lines (detailed per-row CSVs
+are printed by each module's own main, reachable via
+``python -m benchmarks.<name>``).
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def _timed(name, fn, derive):
+    t0 = time.perf_counter()
+    rows = fn()
+    us = int((time.perf_counter() - t0) * 1e6 / max(len(rows), 1))
+    print(f"{name},{us},{derive(rows)}", flush=True)
+    return rows
+
+
+def fig2_heuristics():
+    from . import fig2_heuristics as m
+
+    def derive(rows):
+        # min feasible budget fraction for h_dtr_eq vs h_lru (avg over models)
+        def min_ok(h):
+            per = {}
+            for r in rows:
+                if r["heuristic"] == h and r["ok"]:
+                    per.setdefault(r["model"], []).append(r["budget"])
+            vals = [min(v) for v in per.values() if v]
+            return round(sum(vals) / max(len(vals), 1), 3)
+        return (f"min_budget h_dtr_eq={min_ok('h_dtr_eq')} "
+                f"h_lru={min_ok('h_lru')}")
+
+    return _timed("fig2_heuristics", m.run, derive)
+
+
+def fig3_static():
+    from . import fig3_static as m
+
+    def derive(rows):
+        dtr = [r["overhead"] for r in rows
+               if r["planner"] == "dtr_dtr" and r["ok"]]
+        opt = [r["overhead"] for r in rows
+               if r["planner"] == "revolve" and r["ok"]]
+        a = sum(dtr) / max(len(dtr), 1)
+        b = sum(opt) / max(len(opt), 1)
+        return f"mean_overhead dtr={a:.3f} revolve_optimal={b:.3f}"
+
+    return _timed("fig3_static", m.run, derive)
+
+
+def fig4_overhead():
+    from . import fig4_overhead as m
+
+    def derive(rows):
+        acc = {}
+        for r in rows:
+            if r["bench"] == "meta" and r["ok"]:
+                acc.setdefault(r["heuristic"], []).append(
+                    r["meta_accesses"])
+        parts = [f"{h}={int(sum(v)/len(v))}" for h, v in sorted(acc.items())]
+        return "mean_meta_accesses " + " ".join(parts)
+
+    return _timed("fig4_overhead",
+                  lambda: m.run_meta_accesses() + m.run_planner_wallclock(),
+                  derive)
+
+
+def fig5_theorem():
+    from . import fig5_theorem as m
+
+    def derive(rows):
+        t31 = [r for r in rows if r["bench"] == "thm31"]
+        first, last = t31[0]["ops_per_n"], t31[-1]["ops_per_n"]
+        return f"thm31 ops/N {first}->{last} (flat=O(N) confirmed)"
+
+    return _timed("fig5_theorem", lambda: m.run_thm31() + m.run_thm32(),
+                  derive)
+
+
+def table1_maxinput():
+    from . import table1_maxinput as m
+
+    def derive(rows):
+        gains = [r["gain"] for r in rows]
+        return f"mean_input_gain={sum(gains)/len(gains):.2f}x"
+
+    return _timed("table1_maxinput",
+                  lambda: m.run_simulated() + m.run_eager_treelstm(), derive)
+
+
+def roofline():
+    from . import roofline as m
+
+    def derive(rows):
+        if not rows:
+            return "no dryrun artifacts (run repro.launch.dryrun --all)"
+        best = max(rows, key=lambda r: r["roofline_frac"])
+        return (f"cells={len(rows)} best={best['arch']}/{best['shape']}"
+                f"@{best['roofline_frac']}")
+
+    return _timed("roofline", m.load, derive)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    fig2_heuristics()
+    fig3_static()
+    fig4_overhead()
+    fig5_theorem()
+    table1_maxinput()
+    roofline()
+
+
+if __name__ == "__main__":
+    main()

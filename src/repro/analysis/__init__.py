@@ -1,0 +1,6 @@
+"""Compiled-artifact analysis: HLO collective accounting + roofline terms."""
+from .hlo import collective_bytes, parse_collectives
+from .roofline import RooflineTerms, roofline
+
+__all__ = ["collective_bytes", "parse_collectives", "RooflineTerms",
+           "roofline"]

@@ -1,0 +1,113 @@
+"""Three-term roofline model for the dry-run artifacts (TPU v5e targets).
+
+  compute   = HLO_FLOPs   / (chips × 197 TFLOP/s bf16)
+  memory    = HLO_bytes   / (chips × 819 GB/s HBM)
+  collective= coll_bytes  / (chips × 50 GB/s per-link ICI)
+
+cost_analysis() on a fully-SPMD-partitioned executable reports *per-device*
+flops/bytes in current jax (we detect + normalize either way via the
+``per_device`` flag the dry-run sets).  The dominant term is the predicted
+bottleneck; MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is
+"useful" (catches remat/redundancy waste — and for the paper's technique the
+remat recompute shows up here *by design*).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+
+@dataclass
+class RooflineTerms:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    flops: float             # whole-program HLO flops (all chips)
+    bytes_accessed: float
+    collective_bytes: float
+    chips: int
+    model_flops: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.compute_s, "memory": self.memory_s,
+                 "collective": self.collective_s}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound ~ max term (perfect overlap assumption)."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_frac(self) -> float:
+        return self.model_flops / self.flops if self.flops else 0.0
+
+    @property
+    def roofline_frac(self) -> float:
+        """Fraction of peak the *useful* model FLOPs achieve at the predicted
+        step time (the score §Perf optimizes)."""
+        t = self.step_time_s
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (t * self.chips * PEAK_FLOPS)
+
+    def as_dict(self) -> dict:
+        return {
+            "compute_s": self.compute_s, "memory_s": self.memory_s,
+            "collective_s": self.collective_s, "dominant": self.dominant,
+            "flops": self.flops, "bytes": self.bytes_accessed,
+            "collective_bytes": self.collective_bytes,
+            "model_flops": self.model_flops,
+            "useful_flops_frac": self.useful_flops_frac,
+            "roofline_frac": self.roofline_frac,
+            "step_time_s": self.step_time_s,
+            "chips": self.chips,
+        }
+
+
+def roofline(cost: dict, coll_bytes: float, chips: int,
+             model_flops: float = 0.0,
+             per_device: bool = True) -> RooflineTerms:
+    """Build terms from compiled.cost_analysis() + parsed collective bytes.
+
+    per_device: cost_analysis numbers are per-device (current jax SPMD
+    behaviour); collective bytes parsed from the per-device HLO module are
+    always per-device.
+    """
+    flops = float(cost.get("flops", 0.0))
+    bts = float(cost.get("bytes accessed", 0.0))
+    if per_device:
+        total_flops = flops * chips
+        total_bytes = bts * chips
+    else:
+        total_flops, total_bytes = flops, bts
+    per_chip_flops = total_flops / chips
+    per_chip_bytes = total_bytes / chips
+    return RooflineTerms(
+        compute_s=per_chip_flops / PEAK_FLOPS,
+        memory_s=per_chip_bytes / HBM_BW,
+        collective_s=float(coll_bytes) / ICI_BW,
+        flops=total_flops,
+        bytes_accessed=total_bytes,
+        collective_bytes=float(coll_bytes),
+        chips=chips,
+        model_flops=model_flops,
+    )
+
+
+def model_flops_train(cfg, tokens: int) -> float:
+    """6·N_active·D for a train step (fwd+bwd)."""
+    return 6.0 * cfg.active_param_count() * tokens
+
+
+def model_flops_decode(cfg, batch: int) -> float:
+    """2·N_active per generated token (fwd only), × batch."""
+    return 2.0 * cfg.active_param_count() * batch
+
+
+def model_flops_prefill(cfg, tokens: int) -> float:
+    return 2.0 * cfg.active_param_count() * tokens

@@ -1,0 +1,4 @@
+"""Checkpointing: sharded-npz snapshots, atomic, elastic restore."""
+from .manager import CheckpointManager, restore_latest, save_checkpoint
+
+__all__ = ["CheckpointManager", "restore_latest", "save_checkpoint"]

@@ -1,0 +1,19 @@
+"""DTR core: the paper's contribution as a reusable library.
+
+Layers:
+  runtime     — greedy online eviction/rematerialization engine (App. C)
+  heuristics  — h_DTR family + caching/checkpointing baselines (Sec. 4.1)
+  graph       — operator log format + replay (App. C.6)
+  graphs      — synthetic model graphs incl. Thm 3.1/3.2 families
+  simulator   — budget sweep harness (Fig. 2/3)
+  baselines   — static checkpointing planners (Fig. 3)
+  planner     — trace-time DTR plan -> jax.checkpoint policy (TPU-native form)
+"""
+from .graph import Log, LogBuilder, replay
+from .heuristics import by_name as heuristic_by_name
+from .runtime import DTRRuntime, OOMError
+
+__all__ = [
+    "Log", "LogBuilder", "replay", "DTRRuntime", "OOMError",
+    "heuristic_by_name",
+]

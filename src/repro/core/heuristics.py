@@ -1,0 +1,156 @@
+"""Eviction heuristics (Sec. 4.1 + Appendix C.3/D.1 of the DTR paper).
+
+All heuristics are score functions over storages; the runtime evicts the
+minimum-score storage.  The ablation grid h'(s, m, c) of Appendix D.1 is
+exposed via ``make_ablation``; the named heuristics from the paper are module
+singletons/factories:
+
+    h_dtr        (c0 + Σ_{e*} c0) / (m · s)     exact evicted neighborhood
+    h_dtr_eq     (c0 + Σ_{ẽ*} c0) / (m · s)     union-find approximation
+    h_dtr_local  c0 / (m · s)
+    h_lru        1 / s
+    h_size       1 / m                           GreedyRemat (Kumar et al.)
+    h_msps       (c0 + Σ_{anc_e} c0) / m         MSPS (Peng et al.)
+    h_rand       U(0, 1)
+    h_estar      c0 + Σ_{e*} c0                  Thm 3.1 heuristic (h_{e*})
+"""
+from __future__ import annotations
+
+import random
+
+
+class Heuristic:
+    name: str = "base"
+    needs_uf: bool = False
+
+    def score(self, rt, s) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+    def __repr__(self) -> str:
+        return f"<heuristic {self.name}>"
+
+
+class HDTR(Heuristic):
+    """Full h_DTR with exact evicted neighborhood e*."""
+    name = "h_dtr"
+
+    def score(self, rt, s) -> float:
+        c = s.local_cost + rt.evicted_neighborhood_cost(s)
+        return c / (s.size * rt.staleness(s))
+
+
+class HDTREq(Heuristic):
+    """h_DTR^eq: union-find ẽ* with the splitting approximation."""
+    name = "h_dtr_eq"
+    needs_uf = True
+
+    def score(self, rt, s) -> float:
+        c = s.local_cost + rt.eq_neighborhood_cost(s)
+        return c / (s.size * rt.staleness(s))
+
+
+class HDTRLocal(Heuristic):
+    name = "h_dtr_local"
+
+    def score(self, rt, s) -> float:
+        return s.local_cost / (s.size * rt.staleness(s))
+
+
+class HLRU(Heuristic):
+    name = "h_lru"
+
+    def score(self, rt, s) -> float:
+        return 1.0 / rt.staleness(s)
+
+
+class HSize(Heuristic):
+    name = "h_size"
+
+    def score(self, rt, s) -> float:
+        return 1.0 / max(s.size, 1)
+
+
+class HMSPS(Heuristic):
+    """MSPS: rematerialization cost over evicted *ancestors*, per byte."""
+    name = "h_msps"
+
+    def score(self, rt, s) -> float:
+        c = s.local_cost + rt.evicted_ancestor_cost(s)
+        return c / max(s.size, 1)
+
+
+class HRandom(Heuristic):
+    name = "h_rand"
+
+    def __init__(self, seed: int = 0) -> None:
+        self._rng = random.Random(seed)
+
+    def score(self, rt, s) -> float:
+        return self._rng.random()
+
+
+class HEStar(Heuristic):
+    """h_{e*} from Sec. 3 / App. A: projected cost per byte, no staleness.
+
+    Under unit cost/size this reduces to |e*(t)| + 1, the heuristic of
+    Theorem 3.1 (evict the tensor with the smallest evicted neighborhood).
+    """
+    name = "h_estar"
+
+    def score(self, rt, s) -> float:
+        return (s.local_cost + rt.evicted_neighborhood_cost(s)) / max(s.size, 1)
+
+
+class HAblation(Heuristic):
+    """Parameterized h'(s, m, c) of Appendix D.1.
+
+    stale  in {True, False}
+    mem    in {True, False}
+    cost   in {"estar", "eq", "local", "no"}
+    """
+
+    def __init__(self, stale: bool, mem: bool, cost: str) -> None:
+        assert cost in ("estar", "eq", "local", "no")
+        self.stale, self.mem, self.cost = stale, mem, cost
+        self.needs_uf = cost == "eq"
+        self.name = (f"h_s{'1' if stale else '0'}"
+                     f"m{'1' if mem else '0'}c_{cost}")
+
+    def score(self, rt, s) -> float:
+        if self.cost == "estar":
+            c = s.local_cost + rt.evicted_neighborhood_cost(s)
+        elif self.cost == "eq":
+            c = s.local_cost + rt.eq_neighborhood_cost(s)
+        elif self.cost == "local":
+            c = s.local_cost
+        else:
+            c = 1.0
+        denom = 1.0
+        if self.mem:
+            denom *= max(s.size, 1)
+        if self.stale:
+            denom *= rt.staleness(s)
+        return c / denom
+
+
+def make_ablation(stale: bool, mem: bool, cost: str) -> Heuristic:
+    return HAblation(stale, mem, cost)
+
+
+def by_name(name: str, seed: int = 0) -> Heuristic:
+    table = {
+        "h_dtr": HDTR,
+        "h_dtr_eq": HDTREq,
+        "h_dtr_local": HDTRLocal,
+        "h_lru": HLRU,
+        "h_size": HSize,
+        "h_msps": HMSPS,
+        "h_estar": HEStar,
+    }
+    if name == "h_rand":
+        return HRandom(seed)
+    return table[name]()
+
+
+ALL_NAMES = ["h_dtr", "h_dtr_eq", "h_dtr_local", "h_lru", "h_size",
+             "h_msps", "h_rand"]

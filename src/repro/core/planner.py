@@ -1,0 +1,307 @@
+"""DTR as a trace-time rematerialization planner (the TPU-native form).
+
+JAX retraces per input shape, so the paper's *online* algorithm can run at
+trace time — the "just in time" static planning the paper describes in Sec. 6
+(possible exactly because DTR's greedy heuristic costs milliseconds, unlike
+Checkmate's ILP).  Pipeline:
+
+  1. ``trace_to_log``: jaxpr of (usually) a value_and_grad step → DTR op log,
+     with tensor sizes from avals and an analytic FLOPs cost model (the
+     deterministic cost model Appendix E.3 recommends).
+  2. ``plan``: replay the log through the DTR engine under a per-device
+     activation-byte budget; tensors tagged via
+     ``jax.ad_checkpoint.checkpoint_name`` that were *never evicted* form the
+     save-set.
+  3. ``policy_from_plan``: the save-set becomes
+     ``jax.checkpoint_policies.save_only_these_names(...)``, enforced by XLA
+     remat — the runtime never sees the evicted activations at all.
+
+Also provides ``block_remat``: DTR-planned segment checkpointing over scanned
+layer stacks (the √N pattern of Thm 3.1 emerges as the planned block size).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Log, LogBuilder, replay
+from .heuristics import by_name
+from .runtime import DTRRuntime, OOMError
+
+
+# ---------------------------------------------------------------------------
+# Cost model over jaxpr equations
+# ---------------------------------------------------------------------------
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape, dtype=np.int64)
+                   * jnp.dtype(aval.dtype).itemsize)
+    except Exception:
+        return 0
+
+
+def _aval_elems(aval) -> int:
+    try:
+        return int(np.prod(aval.shape, dtype=np.int64))
+    except Exception:
+        return 0
+
+
+def eqn_flops(eqn) -> float:
+    """Analytic FLOPs estimate for one jaxpr equation."""
+    prim = eqn.primitive.name
+    if prim == "dot_general":
+        dims = eqn.params["dimension_numbers"]
+        (lc, rc), (lb, rb) = dims
+        lhs = eqn.invars[0].aval
+        batch = 1
+        for d in lb:
+            batch *= lhs.shape[d]
+        k = 1
+        for d in lc:
+            k *= lhs.shape[d]
+        m = _aval_elems(lhs) // max(batch * k, 1)
+        rhs = eqn.invars[1].aval
+        rk = 1
+        for d in rc:
+            rk *= rhs.shape[d]
+        n = _aval_elems(rhs) // max(batch * rk, 1)
+        return 2.0 * batch * m * n * k
+    if prim in ("conv_general_dilated",):
+        out = eqn.outvars[0].aval
+        lhs = eqn.invars[1].aval  # kernel
+        return 2.0 * _aval_elems(out) * _aval_elems(lhs) / max(
+            out.shape[-1] if out.shape else 1, 1)
+    if prim in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod",
+                "argmax", "argmin", "cumsum", "cumlogsumexp", "cummax"):
+        return float(_aval_elems(eqn.invars[0].aval))
+    if prim in ("exp", "log", "tanh", "logistic", "erf", "rsqrt", "sqrt",
+                "sin", "cos", "pow", "integer_pow"):
+        return 4.0 * _aval_elems(eqn.outvars[0].aval)
+    # Metadata-only ops.
+    if prim in ("reshape", "transpose", "broadcast_in_dim", "squeeze",
+                "convert_element_type", "slice", "dynamic_slice",
+                "dynamic_update_slice", "concatenate", "gather", "name",
+                "stop_gradient", "copy", "rev", "iota", "pad",
+                "scatter", "scatter-add", "select_n", "split"):
+        return float(_aval_elems(eqn.outvars[0].aval)) * 0.1
+    # Default: one flop per output element.
+    return float(sum(_aval_elems(o.aval) for o in eqn.outvars))
+
+
+# ---------------------------------------------------------------------------
+# jaxpr -> DTR log
+# ---------------------------------------------------------------------------
+
+@dataclass
+class TracedGraph:
+    log: Log
+    named: dict[str, str]            # checkpoint_name -> log tensor name
+    outputs: list[str]               # log tensor names of jaxpr outputs
+    total_bytes: int = 0
+    total_flops: float = 0.0
+
+
+def _flatten_eqns(jaxpr, depth: int = 0):
+    """Yield (eqn, scale) with nested jaxprs inlined; scan bodies scaled."""
+    for eqn in jaxpr.eqns:
+        prim = eqn.primitive.name
+        if prim in ("pjit", "closed_call", "core_call", "custom_jvp_call",
+                    "custom_vjp_call", "custom_vjp_call_jaxpr", "remat",
+                    "checkpoint", "custom_lin"):
+            inner = None
+            for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                if key in eqn.params:
+                    inner = eqn.params[key]
+                    break
+            if inner is not None:
+                ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                # Treat as opaque op (cost summed) to keep the DAG aligned
+                # with data deps at this level.
+                total = sum(eqn_flops(e) * s
+                            for e, s in _flatten_eqns(ij, depth + 1))
+                yield eqn, ("opaque", total)
+                continue
+        if prim == "scan":
+            length = eqn.params.get("length", 1)
+            inner = eqn.params["jaxpr"]
+            ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            total = sum(eqn_flops(e) * s
+                        for e, s in _flatten_eqns(ij, depth + 1)) * length
+            yield eqn, ("opaque", total)
+            continue
+        if prim in ("while", "cond"):
+            yield eqn, ("opaque", float(
+                sum(_aval_elems(o.aval) for o in eqn.outvars)))
+            continue
+        yield eqn, 1.0
+
+
+def trace_to_log(fn: Callable, *example_args, name: str = "traced",
+                 **example_kwargs) -> TracedGraph:
+    """Trace ``fn`` and convert its jaxpr into a DTR operator log."""
+    closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
+    jaxpr = closed.jaxpr
+    b = LogBuilder(name=name)
+    env: dict[Any, str] = {}
+    named: dict[str, str] = {}
+    total_bytes = 0
+    total_flops = 0.0
+
+    def lookup(v) -> str:
+        # Literals become fresh constants.
+        if not hasattr(v, "count") and hasattr(v, "val"):
+            t = b.constant(_aval_bytes(v.aval), name=f"lit{len(env)}")
+            return t
+        return env[v]
+
+    for v, cv in zip(jaxpr.constvars, closed.consts):
+        env[v] = b.constant(
+            int(getattr(cv, "nbytes", _aval_bytes(v.aval))), name=str(v))
+    for v in jaxpr.invars:
+        env[v] = b.constant(_aval_bytes(v.aval), name=f"in_{v}")
+
+    for eqn, scale in _flatten_eqns(jaxpr):
+        if isinstance(scale, tuple):
+            cost = max(scale[1], 1.0)
+        else:
+            cost = max(eqn_flops(eqn) * scale, 1.0)
+        ins = [lookup(v) for v in eqn.invars]
+        sizes = [_aval_bytes(o.aval) for o in eqn.outvars]
+        prim = eqn.primitive.name
+        # View-like ops share their input's storage (paper alias semantics);
+        # `name` in particular must alias so that evicting the producer
+        # registers against the checkpoint_name tag.
+        aliases = None
+        if prim in ("name", "reshape", "transpose", "squeeze") and ins:
+            aliases = [ins[0]] * len(sizes)
+        outs = b.call(ins, sizes, cost, prim, aliases=aliases)
+        for o, t in zip(eqn.outvars, outs):
+            env[o] = t
+            total_bytes += _aval_bytes(o.aval)
+        total_flops += cost
+        if prim == "name":
+            named[eqn.params["name"]] = outs[0]
+
+    outputs = [env[v] if hasattr(v, "count") or v in env else lookup(v)
+               for v in jaxpr.outvars]
+    log = b.auto_release(keep=outputs)
+    return TracedGraph(log=log, named=named, outputs=outputs,
+                       total_bytes=total_bytes, total_flops=total_flops)
+
+
+# ---------------------------------------------------------------------------
+# Planning
+# ---------------------------------------------------------------------------
+
+@dataclass
+class Plan:
+    budget_bytes: float
+    feasible: bool
+    save_names: list[str] = field(default_factory=list)
+    remat_names: list[str] = field(default_factory=list)
+    est_slowdown: float = 1.0
+    est_peak_bytes: float = 0.0
+    evictions: int = 0
+
+    def policy(self):
+        """A jax.checkpoint policy saving exactly the planned names."""
+        if not self.remat_names:
+            return jax.checkpoint_policies.everything_saveable
+        if not self.save_names:
+            return jax.checkpoint_policies.nothing_saveable
+        return jax.checkpoint_policies.save_only_these_names(
+            *self.save_names)
+
+
+def plan(fn: Callable, *example_args, budget_bytes: float,
+         heuristic: str = "h_dtr_eq", **example_kwargs) -> Plan:
+    """Run the DTR greedy simulation over ``fn``'s graph under a budget.
+
+    Returns the save/remat split over ``checkpoint_name``-tagged tensors.
+    ``fn`` should be the *differentiated* step (e.g. value_and_grad) so the
+    simulation sees the true fwd+bwd tensor lifetime structure.
+    """
+    tg = trace_to_log(fn, *example_args, name="plan", **example_kwargs)
+    rt = DTRRuntime(budget=float(budget_bytes),
+                    heuristic=by_name(heuristic), dealloc="eager")
+    evicted_names: set[str] = set()
+
+    orig_evict = rt._evict
+
+    def traced_evict(s):
+        # Only *pressure* evictions of still-live tensors are remat
+        # decisions; eager evictions at refcount zero are ordinary frees.
+        if s.refs > 0:
+            for tid in s.tensor_tids:
+                evicted_names.add(rt.tensors[tid].name)
+        orig_evict(s)
+
+    rt._evict = traced_evict
+    try:
+        env = replay(tg.log, rt)
+    except OOMError:
+        return Plan(budget_bytes=budget_bytes, feasible=False,
+                    remat_names=sorted(tg.named))
+    # env maps log tensor names -> tids; evicted_names recorded runtime names
+    # — map through: runtime tensors were created with out_names = log names.
+    save, remat = [], []
+    for cname, log_t in tg.named.items():
+        if log_t in evicted_names:
+            remat.append(cname)
+        else:
+            save.append(cname)
+    return Plan(budget_bytes=budget_bytes, feasible=True,
+                save_names=sorted(save), remat_names=sorted(remat),
+                est_slowdown=rt.slowdown(), est_peak_bytes=rt.peak_memory,
+                evictions=rt.evictions)
+
+
+def dtr_checkpoint(fn: Callable, *example_args, budget_bytes: float,
+                   grad_fn: Callable | None = None,
+                   heuristic: str = "h_dtr_eq", **example_kwargs):
+    """Wrap ``fn`` in jax.checkpoint with a DTR-planned policy.
+
+    ``grad_fn`` (default: grad of sum(fn)) is traced for planning so the
+    simulation sees backward lifetimes; the returned callable is
+    ``jax.checkpoint(fn, policy=planned)``.
+    """
+    if grad_fn is None:
+        def grad_fn(*a, **k):
+            return jax.grad(
+                lambda *aa: jnp.sum(fn(*aa, **k)).astype(jnp.float32)
+            )(*a)
+    p = plan(grad_fn, *example_args, budget_bytes=budget_bytes,
+             heuristic=heuristic, **example_kwargs)
+    return jax.checkpoint(fn, policy=p.policy()), p
+
+
+# ---------------------------------------------------------------------------
+# Segment-level planning for scanned layer stacks
+# ---------------------------------------------------------------------------
+
+def plan_layer_blocks(n_layers: int, layer_act_bytes: float,
+                      budget_bytes: float) -> int:
+    """Pick the remat block size for a scanned stack of ``n_layers``.
+
+    DTR's even-spacing behaviour (Lemma A.1) on a homogeneous chain puts
+    checkpoints every L/B layers; with a byte budget this is
+    ceil(n_layers * layer_act_bytes / budget) layers per block, clamped to
+    [1, n_layers].  Block size √L falls out when the budget equals
+    √L·layer_act_bytes — the Thm 3.1 regime.
+    """
+    if budget_bytes <= 0 or n_layers <= 1:
+        return 1
+    blocks = max(int(budget_bytes // max(layer_act_bytes, 1)), 1)
+    size = math.ceil(n_layers / blocks)
+    return max(1, min(size, n_layers))
+
+
+def sqrt_block_size(n_layers: int) -> int:
+    return max(1, int(round(math.sqrt(n_layers))))

@@ -1,0 +1,562 @@
+"""The DTR runtime engine (Figure 1 + Appendix C of the paper).
+
+Storage-centric model: tensors are views of storages; operators are pure;
+metadata per storage = size, (cached) local compute cost, last access time,
+locks (pending remats), refs (external liveness).  On allocation pressure the
+runtime evicts the resident storage minimizing the active heuristic's score,
+and rematerializes evicted tensors on access by (recursively) replaying parent
+operators.  Supports the paper's deallocation policies: ``ignore``, ``eager``
+(evict on refcount zero), and ``banish`` (permanent free + pinning children).
+
+The engine is *simulated-time*: the clock advances by operator cost on each
+(re)execution, which reproduces the paper's compute-overhead accounting while
+staying deterministic (Appendix E.3 recommends exactly this).  It is also the
+execution engine for the *eager* executor (``repro.eager``), which attaches
+real JAX buffers to storages via the ``materialize_fn`` / ``free_fn`` hooks.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional, Sequence
+
+from .unionfind import CostUnionFind
+
+
+class OOMError(RuntimeError):
+    """Raised when an allocation cannot be satisfied by any eviction."""
+
+
+class ThrashError(RuntimeError):
+    """Raised when rematerialization compute exceeds the thrash limit.
+
+    The paper's prototype could hang in deeply recursive rematerializations
+    (App. E.3); the simulator aborts instead once total compute passes
+    ``compute_limit`` so budget sweeps terminate."""
+
+
+class BanishedError(RuntimeError):
+    """Raised when a banished (permanently freed) tensor is accessed."""
+
+
+@dataclass
+class Operator:
+    op_id: int
+    name: str
+    cost: float
+    input_tids: tuple[int, ...]
+    output_tids: tuple[int, ...] = ()
+
+
+@dataclass
+class TensorRec:
+    tid: int
+    name: str
+    op: Optional[Operator]          # parent op; None for constants
+    sid: int
+    is_alias: bool
+    defined: bool = True            # materialized & view metadata valid
+    refs: int = 1                   # external references
+
+
+@dataclass
+class StorageRec:
+    sid: int
+    size: int
+    root_tid: int
+    tensor_tids: list[int] = field(default_factory=list)
+    resident: bool = True
+    locks: int = 0
+    pinned: bool = False            # constant or banish-pinned: unevictable
+    banished: bool = False
+    constant: bool = False
+    last_access: float = 0.0
+    local_cost: float = 0.0         # cached cost(S) = sum of view op costs
+    deps: set[int] = field(default_factory=set)       # parent storages
+    children: set[int] = field(default_factory=set)   # dependent storages
+    uf: int = -1                    # union-find handle (h_eq heuristics)
+    refs: int = 0                   # cached sum of view refs
+
+    def evictable(self) -> bool:
+        return (self.resident and not self.pinned and not self.banished
+                and self.locks == 0 and not self.constant)
+
+
+class DTRRuntime:
+    """Greedy online rematerialization engine, parameterized by heuristic."""
+
+    def __init__(
+        self,
+        budget: float,
+        heuristic,
+        dealloc: str = "eager",            # 'ignore' | 'eager' | 'banish'
+        ignore_small_frac: float = 0.0,     # E.2: skip tensors < frac*mean size
+        sample_sqrt: bool = False,          # E.2: search sqrt(n) random sample
+        seed: int = 0,
+        materialize_fn: Optional[Callable] = None,  # eager-mode hooks
+        free_fn: Optional[Callable] = None,
+        compute_limit: float = float("inf"),
+    ) -> None:
+        assert dealloc in ("ignore", "eager", "banish")
+        self.budget = float(budget)
+        self.heuristic = heuristic
+        self.dealloc = dealloc
+        self.ignore_small_frac = ignore_small_frac
+        self.sample_sqrt = sample_sqrt
+        import random as _random
+        self._rng = _random.Random(seed)
+        self.materialize_fn = materialize_fn
+        self.free_fn = free_fn
+        self.compute_limit = float(compute_limit)
+
+        self.tensors: dict[int, TensorRec] = {}
+        self.storages: dict[int, StorageRec] = {}
+        self.ops: dict[int, Operator] = {}
+        self._next_tid = 0
+        self._next_sid = 0
+        self._next_oid = 0
+
+        self.clock = 0.0
+        self.memory = 0.0
+        self.peak_memory = 0.0
+        self.total_compute = 0.0        # includes rematerializations
+        self.base_compute = 0.0         # first executions only
+        self.ops_executed = 0           # op (re)plays, unit counting for Thm 3.1
+        self.remat_ops = 0
+        self.evictions = 0
+        self.meta_accesses = 0          # Appendix D.3 accounting
+        self._pending_banish: set[int] = set()
+        self._version = 0               # bumped on evict/remat: e* cache key
+        self._estar_cache: dict[int, tuple[int, float, int]] = {}
+
+        self.uf = CostUnionFind() if getattr(heuristic, "needs_uf", False) else None
+        if hasattr(heuristic, "bind"):
+            heuristic.bind(self)
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def constant(self, size: int, name: str = "const") -> int:
+        tid, sid = self._next_tid, self._next_sid
+        self._next_tid += 1
+        self._next_sid += 1
+        t = TensorRec(tid, name, None, sid, is_alias=False)
+        s = StorageRec(sid, int(size), tid, [tid], constant=True, pinned=True,
+                       last_access=self.clock, refs=1)
+        if self.uf is not None:
+            s.uf = self.uf.make(0.0)
+        self.tensors[tid] = t
+        self.storages[sid] = s
+        self._alloc(size)
+        return tid
+
+    def call(
+        self,
+        op_name: str,
+        cost: float,
+        input_tids: Sequence[int],
+        out_sizes: Sequence[int],
+        aliases: Optional[Sequence[Optional[int]]] = None,
+        out_names: Optional[Sequence[str]] = None,
+    ) -> list[int]:
+        """Execute a new pure operator; returns output tensor ids."""
+        aliases = list(aliases) if aliases is not None else [None] * len(out_sizes)
+        out_names = list(out_names) if out_names else [
+            f"{op_name}.{i}" for i in range(len(out_sizes))]
+        oid = self._next_oid
+        self._next_oid += 1
+        op = Operator(oid, op_name, float(cost), tuple(input_tids))
+        self.ops[oid] = op
+
+        # Create output tensor/storage records (not yet resident).
+        out_tids: list[int] = []
+        for size, al, nm in zip(out_sizes, aliases, out_names):
+            tid = self._next_tid
+            self._next_tid += 1
+            if al is not None:
+                sid = self.tensors[al].sid
+                t = TensorRec(tid, nm, op, sid, is_alias=True, defined=False)
+                s = self.storages[sid]
+                s.tensor_tids.append(tid)
+                s.local_cost += op.cost
+                s.refs += 1
+            else:
+                sid = self._next_sid
+                self._next_sid += 1
+                t = TensorRec(tid, nm, op, sid, is_alias=False, defined=False)
+                s = StorageRec(sid, int(size), tid, [tid], resident=False,
+                               last_access=self.clock, local_cost=op.cost,
+                               refs=1)
+                if self.uf is not None:
+                    s.uf = self.uf.make(0.0)
+                self.storages[sid] = s
+            self.tensors[tid] = t
+            out_tids.append(tid)
+        op.output_tids = tuple(out_tids)
+
+        # Wire storage-level dependency edges.
+        out_sids = {self.tensors[t].sid for t in out_tids}
+        in_sids = {self.tensors[u].sid for u in input_tids}
+        for osid in out_sids:
+            for isid in in_sids:
+                if isid != osid:
+                    self.storages[osid].deps.add(isid)
+                    self.storages[isid].children.add(osid)
+
+        # Inputs must be materialized, then perform.  Lock inputs across the
+        # whole sequence so rematerializing input B cannot evict input A.
+        lock_sids = [self.tensors[u].sid for u in input_tids]
+        for sid in lock_sids:
+            self.storages[sid].locks += 1
+        try:
+            self._ensure_defined(list(input_tids))
+            self._perform(op, first=True)
+        finally:
+            for sid in lock_sids:
+                self.storages[sid].locks -= 1
+        return out_tids
+
+    def get(self, tid: int) -> None:
+        """Access a tensor: rematerialize if needed, update staleness."""
+        self._ensure_defined([tid])
+        s = self.storages[self.tensors[tid].sid]
+        s.last_access = self.clock
+
+    def addref(self, tid: int) -> None:
+        t = self.tensors[tid]
+        t.refs += 1
+        self.storages[t.sid].refs += 1
+
+    def release(self, tid: int) -> None:
+        """External reference dropped (RELEASE in the log)."""
+        t = self.tensors[tid]
+        t.refs -= 1
+        s = self.storages[t.sid]
+        s.refs -= 1
+        if s.refs > 0 or s.banished:
+            return
+        if self.dealloc == "ignore":
+            return
+        if self.dealloc == "eager":
+            if s.evictable():
+                self._evict(s)
+        elif self.dealloc == "banish":
+            self._try_banish(s)
+
+    def size_of(self, tid: int) -> int:
+        t = self.tensors[tid]
+        return 0 if t.is_alias else self.storages[t.sid].size
+
+    def finalize(self) -> None:
+        """Output condition: all externally-referenced tensors resident+locked."""
+        for t in list(self.tensors.values()):
+            if t.refs > 0 and not self.storages[t.sid].banished:
+                self._ensure_defined([t.tid])
+                self.storages[t.sid].locks += 1
+
+    # -- introspection (benchmarks / adversary) -------------------------
+    def resident_tids(self) -> set[int]:
+        return {t.tid for t in self.tensors.values()
+                if t.defined and self.storages[t.sid].resident}
+
+    def slowdown(self) -> float:
+        return self.total_compute / max(self.base_compute, 1e-12)
+
+    # ------------------------------------------------------------------
+    # Materialization
+    # ------------------------------------------------------------------
+    def _ensure_defined(self, tids: list[int]) -> None:
+        """Iteratively rematerialize every tensor in ``tids``.
+
+        Lock discipline (*lazy locking*): a frame rematerializing tensor t
+        first rebuilds op(t)'s undefined inputs WITHOUT holding locks, then —
+        once every input is simultaneously defined — locks them all, performs
+        op(t), and unlocks.  The paper's pseudocode locks parents on entry
+        before recursing, which pins every resident input along a deep
+        rematerialization chain at once (the App. E.3 UNet failure mode);
+        lazy locking keeps the pinned set to the current op's inputs only,
+        preserving the O(1)-extra-memory behaviour of Lemma A.3 for gradient
+        chains as well.  A visit-count guard falls back to incremental
+        locking (monotone progress, more pinning) if inputs keep getting
+        re-evicted — so termination is guaranteed either way.
+        """
+        for root in tids:
+            if self.tensors[root].defined:
+                continue
+            # Frame: [tid, visits, locked_sids].
+            stack: list[list] = [[root, 0, []]]
+            try:
+                while stack:
+                    frame = stack[-1]
+                    tid = frame[0]
+                    t = self.tensors[tid]
+                    if t.defined:
+                        stack.pop()
+                        for sid in frame[2]:
+                            self.storages[sid].locks -= 1
+                        continue
+                    s = self.storages[t.sid]
+                    if s.banished:
+                        raise BanishedError(
+                            f"access to banished tensor {t.name}")
+                    op = t.op
+                    if op is None:
+                        raise BanishedError(f"constant {t.name} unavailable")
+                    frame[1] += 1
+                    if frame[1] > 8:
+                        # Livelock guard: siblings keep evicting each other —
+                        # lock defined inputs now so progress is monotone.
+                        for u in op.input_tids:
+                            sid = self.tensors[u].sid
+                            if (self.tensors[u].defined
+                                    and sid not in frame[2]):
+                                self.storages[sid].locks += 1
+                                frame[2].append(sid)
+                    undef = [u for u in op.input_tids
+                             if not self.tensors[u].defined]
+                    if undef:
+                        for u in undef:
+                            stack.append([u, 0, []])
+                        continue
+                    # All inputs defined *now*: lock, perform, unlock, pop.
+                    lk = [self.tensors[u].sid for u in op.input_tids]
+                    for sid in lk:
+                        self.storages[sid].locks += 1
+                    try:
+                        self._perform(op, first=False)
+                    finally:
+                        for sid in lk:
+                            self.storages[sid].locks -= 1
+                    stack.pop()
+                    for sid in frame[2]:
+                        self.storages[sid].locks -= 1
+            except BaseException:
+                for fr in stack:
+                    for sid in fr[2]:
+                        self.storages[sid].locks -= 1
+                raise
+
+    def _perform(self, op: Operator, first: bool) -> None:
+        """(Re)execute ``op``: allocate outputs, charge cost, define views."""
+        # Lock inputs during allocation.
+        in_sids = [self.tensors[u].sid for u in op.input_tids]
+        for sid in in_sids:
+            self.storages[sid].locks += 1
+        try:
+            # Inputs are accessed by this op: update staleness metadata.
+            for sid in in_sids:
+                self.storages[sid].last_access = self.clock
+            need = 0
+            out_storages: list[StorageRec] = []
+            for tid in op.output_tids:
+                t = self.tensors[tid]
+                s = self.storages[t.sid]
+                if s.banished:
+                    continue
+                if not t.is_alias and not s.resident:
+                    need += s.size
+                    out_storages.append(s)
+            self._alloc(need, exclude={s.sid for s in out_storages})
+            for s in out_storages:
+                s.resident = True
+                if not first:
+                    self._on_remat(s)
+            # Define output views computed by this op (aliases included).
+            for tid in op.output_tids:
+                t = self.tensors[tid]
+                s = self.storages[t.sid]
+                if s.banished or not s.resident:
+                    # Not resident: either an alias of an evicted storage, or
+                    # a doubly-computed output evicted mid-allocation (the
+                    # paper's "ephemeral" case) — leave for a later remat.
+                    continue
+                t.defined = True
+                s.last_access = self.clock
+            self.clock += op.cost
+            self.total_compute += op.cost
+            self.ops_executed += 1
+            if self.total_compute > self.compute_limit:
+                raise ThrashError(
+                    f"compute {self.total_compute:.3g} exceeded thrash "
+                    f"limit {self.compute_limit:.3g}")
+            if first:
+                self.base_compute += op.cost
+            else:
+                self.remat_ops += 1
+            if self.materialize_fn is not None:
+                self.materialize_fn(op, first)
+            # Banish retry: a remat may unblock pending banishes.
+            if self._pending_banish:
+                for sid in list(self._pending_banish):
+                    s = self.storages[sid]
+                    if s.refs <= 0 and not s.banished:
+                        self._try_banish(s)
+        finally:
+            for sid in in_sids:
+                self.storages[sid].locks -= 1
+
+    # ------------------------------------------------------------------
+    # Allocation / eviction
+    # ------------------------------------------------------------------
+    def _alloc(self, need: float, exclude: set[int] = frozenset()) -> None:
+        if need <= 0:
+            self.peak_memory = max(self.peak_memory, self.memory)
+            return
+        while self.memory + need > self.budget:
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                raise OOMError(
+                    f"cannot free {need} bytes (resident={self.memory}, "
+                    f"budget={self.budget})")
+            self._evict(victim)
+        self.memory += need
+        self.peak_memory = max(self.peak_memory, self.memory)
+
+    def _candidates(self, exclude: set[int]) -> list[StorageRec]:
+        pool = [s for s in self.storages.values()
+                if s.evictable() and s.sid not in exclude and s.size > 0]
+        if not pool:
+            return pool
+        if self.ignore_small_frac > 0 and len(pool) > 8:
+            mean = sum(s.size for s in pool) / len(pool)
+            thr = self.ignore_small_frac * mean
+            big = [s for s in pool if s.size >= thr]
+            if big:
+                pool = big
+        if self.sample_sqrt and len(pool) > 16:
+            k = max(int(len(pool) ** 0.5), 8)
+            pool = self._rng.sample(pool, k)
+        return pool
+
+    def _pick_victim(self, exclude: set[int]) -> Optional[StorageRec]:
+        pool = self._candidates(exclude)
+        best, best_score = None, None
+        for s in pool:
+            self.meta_accesses += 1  # one heuristic evaluation
+            score = self.heuristic.score(self, s)
+            if best_score is None or score < best_score:
+                best, best_score = s, score
+        return best
+
+    def _evict(self, s: StorageRec) -> None:
+        assert s.evictable(), f"evicting unevictable storage {s.sid}"
+        s.resident = False
+        for tid in s.tensor_tids:
+            self.tensors[tid].defined = False
+        self.memory -= s.size
+        self.evictions += 1
+        self._version += 1
+        if self.free_fn is not None:
+            self.free_fn(s)
+        if self.uf is not None:
+            # Merge with evicted neighbor components; add own cost (App. C.2).
+            self.uf.add_cost(s.uf, s.local_cost)
+            for nsid in s.deps | s.children:
+                ns = self.storages[nsid]
+                if not ns.resident and not ns.banished:
+                    s.uf = self.uf.union(s.uf, ns.uf)
+                    self.meta_accesses += 1
+
+    def _on_remat(self, s: StorageRec) -> None:
+        self._version += 1
+        if self.uf is not None:
+            s.uf = self.uf.split_approx(s.uf, s.local_cost)
+            self.meta_accesses += 1
+
+    def _try_banish(self, s: StorageRec) -> None:
+        # Banishable iff no *evicted* dependents (children all resident or
+        # banished); otherwise retried after rematerializations.
+        for csid in s.children:
+            c = self.storages[csid]
+            if not c.resident and not c.banished:
+                self._pending_banish.add(s.sid)
+                return
+        self._pending_banish.discard(s.sid)
+        if s.resident:
+            self.memory -= s.size
+            for tid in s.tensor_tids:
+                self.tensors[tid].defined = False
+            if self.free_fn is not None:
+                self.free_fn(s)
+        s.resident = False
+        s.banished = True
+        self._version += 1
+        # Children become non-rematerializable => pin them.
+        for csid in s.children:
+            c = self.storages[csid]
+            if not c.banished:
+                c.pinned = True
+
+    # ------------------------------------------------------------------
+    # Metadata used by heuristics
+    # ------------------------------------------------------------------
+    def staleness(self, s: StorageRec) -> float:
+        return max(self.clock - s.last_access, 1e-9)
+
+    def evicted_neighborhood_cost(self, s: StorageRec) -> float:
+        """Exact  Σ_{T ∈ e*(S)} cost(T)  with per-round caching (App. C.5)."""
+        hit = self._estar_cache.get(s.sid)
+        if hit is not None and hit[0] == self._version:
+            return hit[1]
+        total = 0.0
+        seen: set[int] = set()
+        # Evicted ancestors: closure over evicted deps.
+        stack = [d for d in s.deps if self._is_evicted(d)]
+        while stack:
+            x = stack.pop()
+            if x in seen:
+                continue
+            seen.add(x)
+            self.meta_accesses += 1
+            xs = self.storages[x]
+            total += xs.local_cost
+            stack.extend(d for d in xs.deps if self._is_evicted(d) and d not in seen)
+        # Evicted descendants: closure over evicted children.
+        stack = [c for c in s.children if self._is_evicted(c)]
+        while stack:
+            x = stack.pop()
+            if x in seen:
+                continue
+            seen.add(x)
+            self.meta_accesses += 1
+            xs = self.storages[x]
+            total += xs.local_cost
+            stack.extend(c for c in xs.children
+                         if self._is_evicted(c) and c not in seen)
+        self._estar_cache[s.sid] = (self._version, total, len(seen))
+        return total
+
+    def evicted_ancestor_cost(self, s: StorageRec) -> float:
+        """Σ cost over evicted ancestors only (MSPS, Peng et al. 2020)."""
+        total = 0.0
+        seen: set[int] = set()
+        stack = [d for d in s.deps if self._is_evicted(d)]
+        while stack:
+            x = stack.pop()
+            if x in seen:
+                continue
+            seen.add(x)
+            self.meta_accesses += 1
+            xs = self.storages[x]
+            total += xs.local_cost
+            stack.extend(d for d in xs.deps if self._is_evicted(d) and d not in seen)
+        return total
+
+    def eq_neighborhood_cost(self, s: StorageRec) -> float:
+        """ẽ*(S) via union-find components of evicted neighbors (App. C.2)."""
+        assert self.uf is not None
+        roots: set[int] = set()
+        total = 0.0
+        for nsid in s.deps | s.children:
+            ns = self.storages[nsid]
+            if not ns.resident and not ns.banished:
+                r = self.uf.find(ns.uf)
+                self.meta_accesses += 1
+                if r not in roots:
+                    roots.add(r)
+                    total += self.uf._cost[r]
+        self.meta_accesses += len(roots)
+        return total
+
+    def _is_evicted(self, sid: int) -> bool:
+        s = self.storages[sid]
+        return not s.resident and not s.banished

@@ -1,0 +1,104 @@
+"""Budget-sweep simulation driver (the experiment harness behind Fig. 2/3).
+
+Replays a log at a list of memory budgets (absolute bytes or fractions of the
+unconstrained peak) for each heuristic, recording compute slowdown, eviction /
+remat counts, and metadata accesses; detects OOM (budget below feasibility)
+and thrashing (slowdown >= threshold).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .graph import Log, replay
+from .heuristics import Heuristic, by_name
+from .runtime import DTRRuntime, OOMError, ThrashError
+
+
+@dataclass
+class RunResult:
+    budget: float
+    ok: bool
+    slowdown: float = float("inf")
+    compute: float = 0.0
+    base_compute: float = 0.0
+    evictions: int = 0
+    remat_ops: int = 0
+    ops_executed: int = 0
+    meta_accesses: int = 0
+    peak_memory: float = 0.0
+    error: str = ""
+
+
+@dataclass
+class SweepResult:
+    log_name: str
+    heuristic: str
+    baseline_peak: float
+    runs: list[RunResult] = field(default_factory=list)
+
+    def last_ok_before_thrash(self, thresh: float = 2.0) -> float | None:
+        """Smallest budget fraction with slowdown < thresh (paper's dashed line)."""
+        ok = [r for r in self.runs if r.ok and r.slowdown < thresh]
+        return min((r.budget for r in ok), default=None)
+
+
+def measure_baseline(log: Log) -> tuple[float, float]:
+    """(peak_memory, total_cost) of an unconstrained run."""
+    rt = DTRRuntime(budget=float("inf"), heuristic=by_name("h_lru"),
+                    dealloc="eager")
+    replay(log, rt)
+    return rt.peak_memory, rt.total_compute
+
+
+def simulate(
+    log: Log,
+    heuristic: Heuristic | str,
+    budget: float,
+    dealloc: str = "eager",
+    ignore_small_frac: float = 0.0,
+    sample_sqrt: bool = False,
+    seed: int = 0,
+    thrash_factor: float = 50.0,
+) -> RunResult:
+    h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
+    rt = DTRRuntime(budget=budget, heuristic=h, dealloc=dealloc,
+                    ignore_small_frac=ignore_small_frac,
+                    sample_sqrt=sample_sqrt, seed=seed,
+                    compute_limit=thrash_factor * log.baseline_cost())
+    try:
+        replay(log, rt)
+    except (OOMError, ThrashError) as e:
+        return RunResult(budget=budget, ok=False, error=str(e),
+                         compute=rt.total_compute,
+                         base_compute=rt.base_compute,
+                         evictions=rt.evictions, remat_ops=rt.remat_ops,
+                         ops_executed=rt.ops_executed,
+                         peak_memory=rt.peak_memory,
+                         meta_accesses=rt.meta_accesses
+                         + (rt.uf.accesses if rt.uf else 0))
+    return RunResult(
+        budget=budget, ok=True, slowdown=rt.slowdown(),
+        compute=rt.total_compute, base_compute=rt.base_compute,
+        evictions=rt.evictions, remat_ops=rt.remat_ops,
+        ops_executed=rt.ops_executed,
+        meta_accesses=rt.meta_accesses + (rt.uf.accesses if rt.uf else 0),
+        peak_memory=rt.peak_memory)
+
+
+def sweep(
+    log: Log,
+    heuristic: str,
+    fractions: list[float],
+    dealloc: str = "eager",
+    seed: int = 0,
+) -> SweepResult:
+    peak, _ = measure_baseline(log)
+    out = SweepResult(log_name=log.name, heuristic=heuristic,
+                      baseline_peak=peak)
+    for f in fractions:
+        # Fresh heuristic per run (h_rand carries RNG state; h_eq carries UF).
+        out.runs.append(
+            simulate(log, by_name(heuristic, seed), budget=f * peak,
+                     dealloc=dealloc, seed=seed))
+        out.runs[-1].budget = f  # report as fraction
+    return out

@@ -1,0 +1,10 @@
+"""Distributed substrate: logical sharding rules, collectives, monitoring."""
+from .sharding import (
+    LOGICAL_RULES, ParamInfo, axis_resources, current_mesh, mesh_context,
+    param_pspec, pspec, shard,
+)
+
+__all__ = [
+    "LOGICAL_RULES", "ParamInfo", "axis_resources", "current_mesh",
+    "mesh_context", "param_pspec", "pspec", "shard",
+]

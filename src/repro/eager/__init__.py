@@ -1,0 +1,13 @@
+"""Eager DTR executor — the PyTorch-prototype analogue on JAX eager mode.
+
+JAX without ``jit`` dispatches op-by-op (define-by-run), which is exactly the
+setting of the paper's prototype (Sec. 5 / App. E).  This package interposes
+on operator calls: ``DTRArray`` wraps a concrete ``jax.Array``; every op goes
+through a :class:`DTRContext`, which tracks metadata (size, cost, staleness),
+enforces a byte budget by *really deleting* buffers of evicted arrays, and
+rematerializes on access by replaying parent-op closures — supporting
+arbitrary Python control flow (TreeLSTM etc.).
+"""
+from .executor import DTRArray, DTRContext, op
+
+__all__ = ["DTRArray", "DTRContext", "op"]

@@ -1,0 +1,170 @@
+"""Op-interposition layer: DTR over concrete JAX arrays in eager mode.
+
+Mirrors the paper's PyTorch prototype (Sec. 5):
+
+  * every operator call is dispatched through :meth:`DTRContext.call`, which
+    registers the op + measured cost with the DTR runtime, stores a replay
+    closure, and returns :class:`DTRArray` handles;
+  * under memory pressure the runtime picks victims via ``h_DTR^eq`` (or any
+    heuristic) and the context *actually drops the buffers*;
+  * accessing an evicted array triggers recursive rematerialization through
+    the stored closures.
+
+Like the prototype, the budget may be exceeded by exactly one allocation
+(op outputs are computed before the eviction pass — Appendix E.1 notes the
+same slack).
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core.heuristics import by_name
+from ..core.runtime import DTRRuntime, Operator
+
+
+class DTRArray:
+    """Handle to a (possibly evicted) tensor managed by a DTRContext."""
+
+    __slots__ = ("ctx", "tid", "shape", "dtype")
+
+    def __init__(self, ctx: "DTRContext", tid: int, shape, dtype):
+        self.ctx = ctx
+        self.tid = tid
+        self.shape = tuple(shape)
+        self.dtype = dtype
+
+    @property
+    def value(self) -> jax.Array:
+        """Materialize (rematerializing if evicted) and return the buffer."""
+        return self.ctx.fetch(self)
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)
+                   * jnp.dtype(self.dtype).itemsize)
+
+    def release(self) -> None:
+        self.ctx.rt.release(self.tid)
+
+    # Convenience arithmetic (sugar over ctx.call).
+    def __add__(self, other):
+        return self.ctx.call("add", jnp.add, [self, other])[0]
+
+    def __mul__(self, other):
+        return self.ctx.call("mul", jnp.multiply, [self, other])[0]
+
+    def __matmul__(self, other):
+        return self.ctx.call("matmul", jnp.matmul, [self, other])[0]
+
+    def __repr__(self):
+        s = self.ctx.rt.storages[self.ctx.rt.tensors[self.tid].sid]
+        state = "resident" if s.resident else "evicted"
+        return f"DTRArray(shape={self.shape}, dtype={self.dtype}, {state})"
+
+
+class DTRContext:
+    """Owns the runtime, the buffers, and the replay closures."""
+
+    def __init__(self, budget_bytes: float, heuristic: str = "h_dtr_eq",
+                 dealloc: str = "eager", use_wallclock_cost: bool = True,
+                 seed: int = 0):
+        self.rt = DTRRuntime(
+            budget=float(budget_bytes), heuristic=by_name(heuristic, seed),
+            dealloc=dealloc,
+            materialize_fn=self._on_perform, free_fn=self._on_free)
+        self.buffers: dict[int, jax.Array] = {}     # tid -> concrete array
+        self.closures: dict[int, Callable] = {}     # op_id -> replay fn
+        self.use_wallclock_cost = use_wallclock_cost
+        self._pending_outputs: list[jax.Array] | None = None
+        self.remat_runs = 0
+
+    # ------------------------------------------------------------------
+    # Public API
+    # ------------------------------------------------------------------
+    def wrap(self, x, constant: bool = True, name: str = "const") -> DTRArray:
+        """Lift a concrete array into DTR management ("checkpoint()")."""
+        x = jnp.asarray(x)
+        tid = self.rt.constant(x.nbytes, name=name)
+        self.buffers[tid] = x
+        return DTRArray(self, tid, x.shape, x.dtype)
+
+    def fetch(self, a: DTRArray) -> jax.Array:
+        """"decheckpoint()": rematerialize if needed and return the value."""
+        self.rt.get(a.tid)
+        return self.buffers[a.tid]
+
+    def call(self, name: str, fn: Callable, args: Sequence,
+             n_outputs: int | None = None) -> list[DTRArray]:
+        """Dispatch ``fn(*args)`` through DTR.
+
+        ``args`` may mix DTRArrays and plain arrays/scalars; plain values are
+        captured in the closure (treated as op attributes, not tensors).
+        """
+        dtr_args = [a for a in args if isinstance(a, DTRArray)]
+        in_tids = [a.tid for a in dtr_args]
+
+        def replay(*concrete):
+            it = iter(concrete)
+            full = [next(it) if isinstance(a, DTRArray) else a for a in args]
+            out = fn(*full)
+            return out if isinstance(out, tuple) else (out,)
+
+        # Execute now with materialized inputs (also measures cost).
+        concrete_in = [self.fetch(a) for a in dtr_args]
+        t0 = time.perf_counter()
+        outs = replay(*concrete_in)
+        jax.block_until_ready(outs)
+        elapsed = time.perf_counter() - t0
+        cost = max(elapsed, 1e-7) if self.use_wallclock_cost else 1.0
+
+        self._pending_outputs = list(outs)
+        oid = self.rt._next_oid
+        self.closures[oid] = replay
+        tids = self.rt.call(name, cost, in_tids,
+                            [int(o.nbytes) for o in outs])
+        self._pending_outputs = None
+        return [DTRArray(self, tid, o.shape, o.dtype)
+                for tid, o in zip(tids, outs)]
+
+    def live_bytes(self) -> int:
+        """Actual bytes held in resident buffers (for budget verification)."""
+        total = 0
+        for tid, buf in self.buffers.items():
+            t = self.rt.tensors[tid]
+            if t.defined and not t.is_alias:
+                total += int(buf.nbytes)
+        return total
+
+    # ------------------------------------------------------------------
+    # Runtime hooks
+    # ------------------------------------------------------------------
+    def _on_perform(self, op: Operator, first: bool) -> None:
+        if first:
+            outs = self._pending_outputs
+            assert outs is not None, "first perform without pending outputs"
+        else:
+            # Rematerialization: replay closure with input buffers (the
+            # runtime guarantees inputs are defined here).
+            self.remat_runs += 1
+            ins = [self.buffers[tid] for tid in op.input_tids]
+            outs = list(self.closures[op.op_id](*ins))
+        for tid, buf in zip(op.output_tids, outs):
+            if self.rt.tensors[tid].defined:
+                self.buffers[tid] = buf
+
+    def _on_free(self, storage) -> None:
+        for tid in storage.tensor_tids:
+            self.buffers.pop(tid, None)
+
+
+def op(ctx: DTRContext, name: str, fn: Callable) -> Callable:
+    """Decorator-style helper:  f = op(ctx, "gelu", jax.nn.gelu)."""
+    def wrapped(*args):
+        outs = ctx.call(name, fn, list(args))
+        return outs[0] if len(outs) == 1 else tuple(outs)
+    return wrapped

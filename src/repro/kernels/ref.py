@@ -1,0 +1,57 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_reference(q, k, v, *, causal: bool = True,
+                    window: int = 0) -> jax.Array:
+    """q: [B,Hq,Sq,D]; k/v: [B,Hkv,Skv,D] — naive softmax attention."""
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, hkv, g, sq, d)
+    logits = jnp.einsum("bkgqd,bksd->bkgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) / np.sqrt(d)
+    qpos = jnp.arange(sq)[:, None] + (skv - sq)
+    kpos = jnp.arange(skv)[None, :]
+    if causal:
+        mask = kpos <= qpos
+        if window > 0:
+            mask &= (qpos - kpos) < window
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgqs,bksd->bkgqd", probs, v.astype(jnp.float32))
+    return out.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def rwkv6_reference(r, k, v, w_log, u) -> jax.Array:
+    """Serial recurrence oracle.  r,k,v,w_log: [BH,S,D]; u: [BH,D]."""
+    r = r.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    w = jnp.exp(w_log.astype(jnp.float32))
+    u = u.astype(jnp.float32)
+    bh, s, d = r.shape
+
+    def step(state, inp):
+        rt, kt, vt, wt = inp
+        kv = jnp.einsum("bd,be->bde", kt, vt)
+        out = jnp.einsum("bd,bde->be", rt, state + u[:, :, None] * kv)
+        state = state * wt[:, :, None] + kv
+        return state, out
+
+    s0 = jnp.zeros((bh, d, d), jnp.float32)
+    _, outs = jax.lax.scan(
+        step, s0,
+        (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+         w.swapaxes(0, 1)))
+    return outs.swapaxes(0, 1)
+
+
+def moe_gemm_reference(x, w) -> jax.Array:
+    """x: [E,C,d]; w: [E,d,F] — per-expert matmul."""
+    return jnp.einsum("ecd,edf->ecf", x.astype(jnp.float32),
+                      w.astype(jnp.float32)).astype(x.dtype)

@@ -1,0 +1,144 @@
+"""Production training driver.
+
+Config-driven: pick an arch, a mesh (production 16×16 / 2×16×16 or a host
+mesh for local runs), parallelism knobs (fsdp, seq sharding, grad accum,
+remat policy) and run a fault-tolerant training loop: sharded train state,
+deterministic seekable data, periodic atomic checkpoints, NaN/divergence
+guard with restore, straggler monitoring.
+
+  # local smoke (CPU, host mesh):
+  PYTHONPATH=src python -m repro.launch.train --arch llama3.2-1b --smoke \
+      --steps 50
+  # production lowering check without hardware is the dry-run; on a real
+  # slice the same flags drive the full mesh:
+  PYTHONPATH=src python -m repro.launch.train --arch mixtral-8x7b \
+      --mesh production --batch 256 --seq 4096 --fsdp --remat dtr
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.ckpt import CheckpointManager
+from repro.data.pipeline import Prefetcher, SyntheticLM
+from repro.distributed.monitor import DivergenceGuard, StragglerMonitor, Timer
+from repro.distributed.sharding import mesh_context
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.launch.steps import make_train_step, state_shardings
+from repro.models import model as M
+from repro.optim import adafactor, adamw, cosine_schedule
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.2-1b")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-sized)")
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "production", "multipod"])
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--remat", default="dtr")
+    ap.add_argument("--fsdp", action="store_true")
+    ap.add_argument("--seq-shard", action="store_true",
+                    help="Megatron-style sequence sharding (seq->model)")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "adafactor"])
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args(argv)
+
+    cfg = (configs.get_smoke(args.arch) if args.smoke
+           else configs.get(args.arch))
+    cfg = cfg.replace(remat=args.remat)
+    if args.smoke:
+        cfg = cfg.replace(dtype="float32")
+
+    mesh = {"host": make_host_mesh,
+            "production": make_production_mesh,
+            "multipod": lambda: make_production_mesh(multi_pod=True)}[
+        args.mesh]()
+    overrides = {"seq": "model"} if args.seq_shard else {}
+
+    opt = (adafactor(lr=args.lr) if args.optimizer == "adafactor"
+           else adamw(lr=cosine_schedule(args.lr, warmup=20,
+                                         total=args.steps)))
+
+    with mesh_context(mesh, overrides=overrides, fsdp=args.fsdp):
+        key = jax.random.PRNGKey(0)
+        params = M.init_params(cfg, key)
+        opt_state = opt.init(params)
+        p_sh, o_sh = state_shardings(cfg, mesh, opt.name, fsdp=args.fsdp)
+        params = jax.device_put(params, p_sh)
+        opt_state = jax.device_put(opt_state, o_sh)
+        step_fn = jax.jit(
+            make_train_step(cfg, opt, grad_accum=args.grad_accum),
+            out_shardings=(p_sh, o_sh, None), donate_argnums=(0, 1))
+
+        n = sum(np.prod(p.shape) for p in jax.tree.leaves(params))
+        print(f"arch={cfg.name} params={n/1e6:.1f}M mesh={dict(mesh.shape)} "
+              f"remat={cfg.remat} fsdp={args.fsdp} ga={args.grad_accum}")
+
+        data = SyntheticLM(vocab=cfg.vocab, seq_len=args.seq,
+                           batch=args.batch, n_codebooks=cfg.n_codebooks)
+        ckpt = CheckpointManager(args.ckpt_dir,
+                                 every_steps=args.ckpt_every, keep=2)
+        monitor = StragglerMonitor()
+        guard = DivergenceGuard()
+
+        start, restored, extra = ckpt.restore(
+            {"params": params, "opt": opt_state})
+        if start is not None:
+            params = jax.device_put(restored["params"], p_sh)
+            opt_state = jax.device_put(restored["opt"], o_sh)
+            start += 1
+            print(f"resumed at step {start}")
+        else:
+            start = 0
+
+        prefetch = Prefetcher(data, start_step=start)
+        try:
+            for step in range(start, args.steps):
+                _, host_batch = prefetch.next()
+                batch = {k: jnp.asarray(v) for k, v in host_batch.items()}
+                with Timer() as t:
+                    new_p, new_o, metrics = step_fn(params, opt_state, batch)
+                    jax.block_until_ready(metrics["loss"])
+                loss = float(metrics["loss"])
+                gn = float(metrics["grad_norm"])
+                action = guard.check(loss, gn)
+                if action == "skip":
+                    print(f"step {step}: bad step ({loss=:.3g}) — skipped")
+                    continue
+                if action == "restore":
+                    s, restored, _ = ckpt.restore(
+                        {"params": params, "opt": opt_state})
+                    if s is not None:
+                        params = jax.device_put(restored["params"], p_sh)
+                        opt_state = jax.device_put(restored["opt"], o_sh)
+                        print(f"step {step}: restored from {s}")
+                    continue
+                params, opt_state = new_p, new_o
+                st = monitor.record(step, t.seconds, loss, gn)
+                if step % 10 == 0 or step == args.steps - 1:
+                    print(f"step {step:5d} loss {loss:8.4f} "
+                          f"gnorm {gn:7.3f} {t.seconds*1e3:6.0f} ms"
+                          + (" [straggler]" if st.flagged else ""),
+                          flush=True)
+                ckpt.maybe_save(step, {"params": params, "opt": opt_state},
+                                extra={"data_step": step})
+        finally:
+            prefetch.stop()
+    print("done")
+
+
+if __name__ == "__main__":
+    main()

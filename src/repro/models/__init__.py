@@ -1,0 +1,11 @@
+"""Model zoo: composable blocks + scanned stacks for all assigned archs."""
+from .config import ModelConfig
+from .model import (
+    cache_structs, decode_step, forward, init_cache, init_params, loss_fn,
+    param_defs, param_structs,
+)
+
+__all__ = [
+    "ModelConfig", "cache_structs", "decode_step", "forward", "init_cache",
+    "init_params", "loss_fn", "param_defs", "param_structs",
+]

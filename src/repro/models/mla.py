@@ -1,0 +1,132 @@
+"""Multi-head Latent Attention (DeepSeek-V3).
+
+Queries and KV are low-rank compressed; only the KV latent (kv_lora_rank) and
+the shared RoPE key (qk_rope_dim) are cached at decode — MLA's memory win.
+Train path expands latents to full heads; decode path uses the *absorbed*
+formulation (scores computed in latent space), which is the
+compute-efficient TPU form.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..distributed.sharding import ParamInfo, shard
+from .config import ModelConfig
+from . import layers as _L
+from .layers import (_sdpa_blocked, adtype, causal_mask, decode_mask, rope)
+
+
+def mla_defs(cfg: ModelConfig) -> dict:
+    d, h = cfg.d_model, cfg.n_heads
+    ql, kl = cfg.q_lora_rank, cfg.kv_lora_rank
+    nope, rop, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "wq_a": ParamInfo((d, ql), cfg.param_dtype, (None, None),
+                          fsdp_dim=0),
+        "q_norm": ParamInfo((ql,), cfg.param_dtype, (None,), init_scale=0.0),
+        "wq_b": ParamInfo((ql, h, nope + rop), cfg.param_dtype,
+                          (None, "heads", None), fsdp_dim=0),
+        "wkv_a": ParamInfo((d, kl + rop), cfg.param_dtype, (None, None),
+                           fsdp_dim=0),
+        "kv_norm": ParamInfo((kl,), cfg.param_dtype, (None,),
+                             init_scale=0.0),
+        "wk_b": ParamInfo((kl, h, nope), cfg.param_dtype,
+                          (None, "heads", None), fsdp_dim=0),
+        "wv_b": ParamInfo((kl, h, vd), cfg.param_dtype,
+                          (None, "heads", None), fsdp_dim=0),
+        "wo": ParamInfo((h, vd, d), cfg.param_dtype,
+                        ("heads", None, None), fsdp_dim=2),
+    }
+
+
+def _rms(x, scale, eps):
+    x32 = x.astype(jnp.float32)
+    y = x32 * jax.lax.rsqrt(jnp.mean(jnp.square(x32), -1, keepdims=True) + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    return {
+        "ckv": ParamInfo((batch, max_len, cfg.kv_lora_rank), cfg.dtype,
+                         ("batch", "kv_seq", None)),
+        "krope": ParamInfo((batch, max_len, cfg.qk_rope_dim), cfg.dtype,
+                           ("batch", "kv_seq", None)),
+    }
+
+
+def mla_apply(cfg: ModelConfig, p, x, *, positions,
+              cache: Optional[dict] = None):
+    dt = adtype(cfg)
+    b, s, d = x.shape
+    h = cfg.n_heads
+    nope, rop, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    scale = 1.0 / np.sqrt(nope + rop)
+
+    # --- queries ---
+    cq = _rms(jnp.einsum("bsd,dq->bsq", x, p["wq_a"].astype(dt)),
+              p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsq,qhk->bshk", cq, p["wq_b"].astype(dt))
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    q_nope = shard(q_nope, "batch", None, "heads", None)
+
+    # --- KV latent ---
+    kv_a = jnp.einsum("bsd,dk->bsk", x, p["wkv_a"].astype(dt))
+    ckv, k_rope_new = kv_a[..., :cfg.kv_lora_rank], kv_a[..., cfg.kv_lora_rank:]
+    ckv = _rms(ckv, p["kv_norm"], cfg.norm_eps)
+    k_rope_new = rope(k_rope_new[:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0, :]
+
+    if cache is None:
+        # Train: expand latents to per-head keys/values.
+        k_nope = jnp.einsum("bsk,khn->bshn", ckv, p["wk_b"].astype(dt))
+        v = jnp.einsum("bsk,khv->bshv", ckv, p["wv_b"].astype(dt))
+        k_nope = shard(k_nope, "batch", None, "heads", None)
+        v = shard(v, "batch", None, "heads", None)
+        if s >= _L.BLOCKED_ATTN_THRESHOLD:
+            # Flash-style blocked path (MHA layout: kv heads == heads);
+            # RoPE halves concatenated into a single qk vector — the full
+            # [S,S] logits never materialize.
+            q_full = jnp.concatenate(
+                [q_nope, q_rope], axis=-1)
+            k_full = jnp.concatenate(
+                [k_nope, jnp.broadcast_to(
+                    k_rope_new[:, :, None, :],
+                    (*k_nope.shape[:3], rop))], axis=-1)
+            out = _sdpa_blocked(cfg, q_full, k_full, v, window=0,
+                                scale=scale)
+        else:
+            logits = (jnp.einsum("bqhn,bshn->bhqs", q_nope, k_nope)
+                      + jnp.einsum("bqhr,bsr->bhqs", q_rope, k_rope_new))
+            logits = logits.astype(jnp.float32) * scale
+            mask = causal_mask(s, s)[:, 0]  # [1,1,S,S]
+            logits = jnp.where(mask, logits, -1e30)
+            probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+            out = jnp.einsum("bhqs,bshv->bqhv", probs, v)
+        new_cache = None
+    else:
+        # Decode (absorbed): score/aggregate directly in latent space.
+        pos = cache["pos"]
+        ckv_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["ckv"], ckv, pos, axis=1)
+        kr_all = jax.lax.dynamic_update_slice_in_dim(
+            cache["krope"], k_rope_new, pos, axis=1)
+        new_cache = {"ckv": ckv_all, "krope": kr_all, "pos": pos + 1}
+        # absorb: q_lat[b,q,h,kl] = q_nope . wk_b^T
+        q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, p["wk_b"].astype(dt))
+        logits = (jnp.einsum("bqhk,bsk->bhqs", q_lat, ckv_all)
+                  + jnp.einsum("bqhr,bsr->bhqs", q_rope, kr_all))
+        logits = logits.astype(jnp.float32) * scale
+        mask = decode_mask(pos, ckv_all.shape[1])[:, 0]
+        logits = jnp.where(mask, logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhqs,bsk->bqhk", probs, ckv_all)
+        out = jnp.einsum("bqhk,khv->bqhv", o_lat, p["wv_b"].astype(dt))
+
+    y = jnp.einsum("bqhv,hvd->bqd", out, p["wo"].astype(dt))
+    y = shard(y, "batch", None, "embed")
+    return y, new_cache

@@ -1,0 +1,105 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma).
+
+Real-Gated Linear Recurrent Unit:   h_t = a_t ⊙ h_{t-1} + √(1−a_t²) ⊙ (i_t ⊙ x_t)
+with  a_t = exp(−c·softplus(Λ)·r_t),  r_t = σ(W_r x_t),  i_t = σ(W_i x_t).
+
+Training uses ``jax.lax.associative_scan`` over (a_t, b_t) pairs — the
+TPU-native parallel form (log-depth, no warp shuffles needed).  Decode is a
+single fused step carrying (h, conv_state).  The full Griffin block is:
+in-proj → [branch1: temporal conv(4) → RG-LRU] ⊙ gelu(branch2) → out-proj.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..distributed.sharding import ParamInfo, shard
+from .config import ModelConfig
+from .layers import adtype
+
+_C = 8.0  # Griffin's fixed recurrence sharpness
+
+
+def rglru_defs(cfg: ModelConfig) -> dict:
+    d, w = cfg.d_model, cfg.lru_width or cfg.d_model
+    cw = cfg.conv_width
+    return {
+        "w_in1": ParamInfo((d, w), cfg.param_dtype, (None, "lru"),
+                           fsdp_dim=0),
+        "w_in2": ParamInfo((d, w), cfg.param_dtype, (None, "lru"),
+                           fsdp_dim=0),
+        "conv": ParamInfo((cw, w), cfg.param_dtype, ("conv", "lru")),
+        "w_i": ParamInfo((w, w), cfg.param_dtype, (None, "lru"), fsdp_dim=0),
+        "w_r": ParamInfo((w, w), cfg.param_dtype, (None, "lru"), fsdp_dim=0),
+        "lam": ParamInfo((w,), cfg.param_dtype, ("lru",), init_scale=0.65),
+        "w_out": ParamInfo((w, d), cfg.param_dtype, ("lru", None),
+                           fsdp_dim=1),
+    }
+
+
+def rglru_cache_defs(cfg: ModelConfig, batch: int) -> dict:
+    w, cw = cfg.lru_width or cfg.d_model, cfg.conv_width
+    return {
+        "h": ParamInfo((batch, w), cfg.dtype, ("batch", "lru")),
+        "conv": ParamInfo((batch, cw - 1, w), cfg.dtype,
+                          ("batch", None, "lru")),
+    }
+
+
+def _gates(cfg, p, u):
+    dt = adtype(cfg)
+    r = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_r"].astype(dt))
+                       .astype(jnp.float32))
+    i = jax.nn.sigmoid(jnp.einsum("...w,wv->...v", u, p["w_i"].astype(dt))
+                       .astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * i * u.astype(jnp.float32)
+    return a, b
+
+
+def _conv_full(p, u, dt):
+    """Causal temporal conv over [B,S,W] with kernel [CW,W]."""
+    cw = p["conv"].shape[0]
+    pad = jnp.pad(u, ((0, 0), (cw - 1, 0), (0, 0)))
+    k = p["conv"].astype(dt)
+    out = sum(pad[:, i:i + u.shape[1], :] * k[i] for i in range(cw))
+    return out
+
+
+def rglru_apply(cfg: ModelConfig, p, x, *, cache: Optional[dict] = None):
+    """x: [B,S,d] (train) or [B,1,d] (decode with cache)."""
+    dt = adtype(cfg)
+    u1 = jnp.einsum("bsd,dw->bsw", x, p["w_in1"].astype(dt))
+    u2 = jnp.einsum("bsd,dw->bsw", x, p["w_in2"].astype(dt))
+    u1 = shard(u1, "batch", None, "lru")
+
+    if cache is None:
+        u1c = _conv_full(p, u1, dt)
+        a, b = _gates(cfg, p, u1c)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        h = h.astype(dt)
+        new_cache = None
+    else:
+        # Decode: update conv state, one recurrence step.
+        conv_st = cache["conv"]                       # [B, CW-1, W]
+        window = jnp.concatenate([conv_st, u1], axis=1)  # [B, CW, W]
+        k = p["conv"].astype(dt)
+        u1c = jnp.einsum("bcw,cw->bw", window, k)[:, None, :]
+        a, b = _gates(cfg, p, u1c)
+        h_prev = cache["h"].astype(jnp.float32)
+        h = (a[:, 0] * h_prev + b[:, 0]).astype(dt)[:, None, :]
+        new_cache = {"h": h[:, 0], "conv": window[:, 1:], }
+
+    y = h * jax.nn.gelu(u2)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"].astype(dt))
+    return shard(out, "batch", None, "embed"), new_cache

@@ -1,0 +1,20 @@
+"""Optimizers (built from scratch — no optax offline): AdamW, Adafactor, SGD-m.
+
+All optimizers are pure pytree transforms with ZeRO-1-friendly state layout:
+the state tree mirrors the param tree, so sharding rules (params sharded over
+``model``, optionally ``fsdp`` over ``data``) apply to the state unchanged —
+which is exactly ZeRO when FSDP is on.
+
+deepseek-v3-671b trains with Adafactor (factored second moment, no first
+moment): 671B params × AdamW-f32 states cannot fit a 512-chip v5e slice;
+Adafactor + bf16 params does (DESIGN.md §5).
+"""
+from .optimizers import (
+    OptState, adafactor, adamw, apply_updates, clip_by_global_norm,
+    make_optimizer, sgdm, cosine_schedule,
+)
+
+__all__ = [
+    "OptState", "adafactor", "adamw", "apply_updates",
+    "clip_by_global_norm", "make_optimizer", "sgdm", "cosine_schedule",
+]

@@ -1,0 +1,183 @@
+"""Minimal, production-shaped optimizer library (pure pytree transforms)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], tuple[Any, OptState]]
+    name: str = "opt"
+
+
+# ---------------------------------------------------------------------------
+# Schedules
+# ---------------------------------------------------------------------------
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1):
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        t = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(np.pi * t))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+# ---------------------------------------------------------------------------
+# Gradient clipping
+# ---------------------------------------------------------------------------
+
+def clip_by_global_norm(grads, max_norm: float):
+    leaves = jax.tree.leaves(grads)
+    gn = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                      for g in leaves))
+    scale = jnp.minimum(1.0, max_norm / (gn + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), gn
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw(lr=1e-3, b1=0.9, b2=0.95, eps=1e-8, weight_decay=0.1,
+          state_dtype="float32") -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+    sd = jnp.dtype(state_dtype)
+
+    def init(params):
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, sd), params)
+        return OptState(jnp.zeros((), jnp.int32),
+                        {"m": z, "v": jax.tree.map(jnp.copy, z)})
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = (b1 * m.astype(jnp.float32) + (1 - b1) * g32)
+            v = (b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32)
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), m.astype(sd), v.astype(sd)
+
+        out = jax.tree.map(upd, grads, state.inner["m"], state.inner["v"],
+                           params)
+        updates = jax.tree.map(lambda t: t[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        m = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        v = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step, {"m": m, "v": v})
+
+    return Optimizer(init, update, "adamw")
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; memory ~ O(n+m) per matrix)
+# ---------------------------------------------------------------------------
+
+def adafactor(lr=1e-2, decay=0.8, eps=1e-30, clip_threshold=1.0,
+              weight_decay=0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def _factored(shape):
+        return len(shape) >= 2
+
+    def init(params):
+        def one(p):
+            if _factored(p.shape):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(one, params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr_fn(step)
+
+        def one(g, s, p):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + eps
+            if _factored(p.shape):
+                vr = beta * s["vr"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = (vr / jnp.mean(vr, axis=-1, keepdims=True)
+                        )[..., None]
+                u = g32 * jax.lax.rsqrt(rfac * vc[..., None, :] + eps)
+                news = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g32 * jax.lax.rsqrt(v + eps)
+                news = {"v": v}
+            # update clipping (RMS <= clip_threshold)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-12)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (-lr_t * u).astype(p.dtype), news
+
+        out = jax.tree.map(one, grads, state.inner, params,
+                           is_leaf=lambda x: isinstance(x, dict)
+                           and ("v" in x or "vr" in x))
+        updates = jax.tree.map(lambda t2: t2[0], out,
+                               is_leaf=lambda x: isinstance(x, tuple))
+        news = jax.tree.map(lambda t2: t2[1], out,
+                            is_leaf=lambda x: isinstance(x, tuple))
+        return updates, OptState(step, news)
+
+    return Optimizer(init, update, "adafactor")
+
+
+# ---------------------------------------------------------------------------
+# SGD with momentum
+# ---------------------------------------------------------------------------
+
+def sgdm(lr=1e-2, momentum=0.9) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32),
+                        jax.tree.map(lambda p: jnp.zeros_like(
+                            p, jnp.float32), params))
+
+    def update(grads, state, params):
+        step = state.step + 1
+        lr_t = lr_fn(step)
+        m = jax.tree.map(lambda mm, g: momentum * mm
+                         + g.astype(jnp.float32), state.inner, grads)
+        updates = jax.tree.map(lambda mm, p: (-lr_t * mm).astype(p.dtype),
+                               m, params)
+        return updates, OptState(step, m)
+
+    return Optimizer(init, update, "sgdm")
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def make_optimizer(name: str, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor, "sgdm": sgdm}[name](**kw)

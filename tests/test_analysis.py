@@ -1,0 +1,80 @@
+"""Tests for the HLO analyzers (collective parse + loop-aware cost)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.hlo import parse_collectives
+from repro.analysis.hlo_cost import analyze, parse_module
+from repro.analysis.roofline import RooflineTerms, roofline
+
+
+def _compile(fn, *args):
+    return jax.jit(fn).lower(*args).compile().as_text()
+
+
+class TestHloCost:
+    def test_dot_flops_exact(self):
+        a = jax.ShapeDtypeStruct((64, 128), np.float32)
+        b = jax.ShapeDtypeStruct((128, 32), np.float32)
+        txt = _compile(lambda x, y: x @ y, a, b)
+        c = analyze(txt)
+        # 2*M*N*K
+        assert c.flops == pytest.approx(2 * 64 * 32 * 128, rel=0.05)
+
+    def test_scan_trip_count_multiplies(self):
+        a = jax.ShapeDtypeStruct((64, 64), np.float32)
+
+        def f(x):
+            def body(c, _):
+                return c @ c, None
+            out, _ = jax.lax.scan(body, x, None, length=10)
+            return out
+
+        c = analyze(_compile(f, a))
+        one = 2 * 64 * 64 * 64
+        assert c.flops == pytest.approx(10 * one, rel=0.2), c.flops
+
+    def test_bytes_scale_with_tensor_size(self):
+        small = jax.ShapeDtypeStruct((64, 64), np.float32)
+        big = jax.ShapeDtypeStruct((512, 512), np.float32)
+        f = lambda x: jnp.tanh(x) * 2 + 1
+        cs = analyze(_compile(f, small))
+        cb = analyze(_compile(f, big))
+        assert cb.bytes_accessed > 30 * cs.bytes_accessed
+
+    def test_parse_module_structure(self):
+        a = jax.ShapeDtypeStruct((32, 32), np.float32)
+        comps, entry = parse_module(_compile(lambda x: (x @ x).sum(), a))
+        assert entry is not None
+        assert entry in comps
+
+
+class TestRoofline:
+    def test_terms_and_dominant(self):
+        rt = roofline({"flops": 197e12, "bytes accessed": 819e9},
+                      coll_bytes=0, chips=1, model_flops=197e12)
+        assert rt.compute_s == pytest.approx(1.0)
+        assert rt.memory_s == pytest.approx(1.0)
+        assert rt.dominant in ("compute", "memory")
+        assert rt.roofline_frac == pytest.approx(1.0)
+
+    def test_collective_dominates(self):
+        rt = roofline({"flops": 1e12, "bytes accessed": 1e9},
+                      coll_bytes=50e9 * 10, chips=4, model_flops=1e12)
+        assert rt.dominant == "collective"
+        assert rt.step_time_s == pytest.approx(10.0)
+
+
+class TestCollectiveParse:
+    def test_counts_and_bytes(self):
+        txt = """
+  %all-reduce.1 = f32[16,256]{1,0} all-reduce(%dot.1), channel_id=1
+  %all-gather.2 = bf16[32,64]{1,0} all-gather(%p), dimensions={0}
+  %all-gather-done.1 = bf16[32,64]{1,0} all-gather-done(%x)
+"""
+        st = parse_collectives(txt)
+        assert st.count_by_kind["all-reduce"] == 1
+        assert st.count_by_kind["all-gather"] == 1
+        assert st.bytes_by_kind["all-reduce"] == 16 * 256 * 4
+        assert st.bytes_by_kind["all-gather"] == 32 * 64 * 2
