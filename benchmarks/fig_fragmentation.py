@@ -1,0 +1,113 @@
+"""Counter-model vs pool-model achievable budgets (the Coop realism gap).
+
+The DTR paper's simulator treats device memory as a fungible byte counter; a
+real allocator needs a *contiguous* block per tensor.  This benchmark sweeps
+budget fractions on the model-shaped graphs under both memory models
+(``alloc_mode="counter"`` vs ``"pool"``, see ``repro.core.simulator``) and
+reports, per model:
+
+  * the smallest feasible budget fraction under each model (and the smallest
+    with slowdown < 2x, the paper's dashed-line criterion);
+  * the counter-vs-pool budget gap — how optimistic the byte counter is;
+  * fragmentation telemetry at the tightest pool-feasible budget (largest
+    free block, external-fragmentation ratio, failed fits, window evictions).
+
+Emits a JSON report (stdout, or ``--out PATH``).  ``--placement`` selects the
+pool placement policy; ``--heuristic`` the eviction heuristic.
+"""
+from __future__ import annotations
+
+import json
+import sys
+
+from repro.core import graphs, simulator
+
+BUDGETS = [1.0, 0.9, 0.8, 0.7, 0.6, 0.5, 0.4, 0.3, 0.25, 0.2, 0.15]
+
+MODELS = {
+    "mlp": lambda: graphs.mlp(depth=16),
+    "resnet": lambda: graphs.resnet(blocks=12),
+    "unet": lambda: graphs.unet(depth=4),
+    "transformer": lambda: graphs.transformer(layers=4, d=16, seq=8),
+    "treelstm": lambda: graphs.treelstm(depth=5),
+}
+
+SLOWDOWN_THRESH = 2.0
+
+
+def _sweep(log, heuristic, peak, alloc_mode, placement):
+    rows = []
+    for frac in BUDGETS:
+        r = simulator.simulate(log, heuristic, budget=frac * peak,
+                               alloc_mode=alloc_mode, placement=placement)
+        rows.append(dict(
+            budget=frac, ok=r.ok,
+            slowdown=round(r.slowdown, 4) if r.ok else None,
+            evictions=r.evictions, remats=r.remat_ops,
+            largest_free=r.largest_free, frag_ratio=round(r.frag_ratio, 4),
+            failed_fits=r.failed_fits, evict_windows=r.evict_windows,
+            error=r.error[:120] if r.error else ""))
+    return rows
+
+
+def _min_budget(rows, thresh=None):
+    ok = [r["budget"] for r in rows
+          if r["ok"] and (thresh is None or r["slowdown"] < thresh)]
+    return min(ok, default=None)
+
+
+def run(heuristic: str = "h_dtr_eq", placement: str = "best_fit",
+        models=None) -> dict:
+    report = {"heuristic": heuristic, "placement": placement,
+              "slowdown_thresh": SLOWDOWN_THRESH, "models": {}}
+    for name, fn in (models or MODELS).items():
+        log = fn()
+        peak, _ = simulator.measure_baseline(log)
+        counter = _sweep(log, heuristic, peak, "counter", placement)
+        pool = _sweep(log, heuristic, peak, "pool", placement)
+        c_min = _min_budget(counter)
+        p_min = _min_budget(pool)
+        entry = {
+            "baseline_peak": peak,
+            "counter": {"min_budget": c_min,
+                        "min_budget_2x": _min_budget(counter,
+                                                     SLOWDOWN_THRESH),
+                        "runs": counter},
+            "pool": {"min_budget": p_min,
+                     "min_budget_2x": _min_budget(pool, SLOWDOWN_THRESH),
+                     "runs": pool},
+            # How many budget points the byte counter over-promises.
+            "budget_gap": (round(p_min - c_min, 4)
+                           if c_min is not None and p_min is not None
+                           else None),
+        }
+        tight = [r for r in pool if r["ok"] and r["budget"] == p_min]
+        if tight:
+            entry["pool_frag_at_min_budget"] = {
+                k: tight[0][k] for k in
+                ("largest_free", "frag_ratio", "failed_fits",
+                 "evict_windows")}
+        report["models"][name] = entry
+    return report
+
+
+def main(argv=()):
+    argv = list(argv)
+    heuristic = (argv[argv.index("--heuristic") + 1]
+                 if "--heuristic" in argv else "h_dtr_eq")
+    placement = (argv[argv.index("--placement") + 1]
+                 if "--placement" in argv else "best_fit")
+    report = run(heuristic=heuristic, placement=placement)
+    text = json.dumps(report, indent=2)
+    if "--out" in argv:
+        path = argv[argv.index("--out") + 1]
+        with open(path, "w") as f:
+            f.write(text + "\n")
+        print(f"wrote {path}")
+    else:
+        print(text)
+    return report
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -91,6 +91,18 @@ def table1_maxinput():
                   lambda: m.run_simulated() + m.run_eager_treelstm(), derive)
 
 
+def fig_fragmentation():
+    from . import fig_fragmentation as m
+
+    def derive(rows):
+        gaps = [e["budget_gap"] for e in rows if e["budget_gap"] is not None]
+        mean = sum(gaps) / max(len(gaps), 1)
+        return f"models={len(rows)} mean_counter_vs_pool_gap={mean:.3f}"
+
+    return _timed("fig_fragmentation",
+                  lambda: list(m.run()["models"].values()), derive)
+
+
 def roofline():
     from . import roofline as m
 
@@ -111,6 +123,7 @@ def main() -> None:
     fig4_overhead()
     fig5_theorem()
     table1_maxinput()
+    fig_fragmentation()
     roofline()
 
 

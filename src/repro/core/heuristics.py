@@ -137,6 +137,28 @@ def make_ablation(stale: bool, mem: bool, cost: str) -> Heuristic:
     return HAblation(stale, mem, cost)
 
 
+def window_cost(rt, heuristic: Heuristic, storages, cache=None) -> float:
+    """Summed heuristic score of a candidate eviction window.
+
+    Contiguity-aware eviction (``repro.alloc``) ranks contiguous windows of
+    storages by this aggregate instead of scoring storages one at a time;
+    ``cache`` (sid -> score) amortizes repeated scoring while sliding the
+    window across the address space.  Each fresh evaluation counts as one
+    metadata access, matching ``DTRRuntime._pick_victim`` accounting.
+    """
+    total = 0.0
+    for s in storages:
+        if cache is not None and s.sid in cache:
+            total += cache[s.sid]
+            continue
+        rt.meta_accesses += 1
+        sc = heuristic.score(rt, s)
+        if cache is not None:
+            cache[s.sid] = sc
+        total += sc
+    return total
+
+
 def by_name(name: str, seed: int = 0) -> Heuristic:
     table = {
         "h_dtr": HDTR,

@@ -95,6 +95,7 @@ class DTRRuntime:
         materialize_fn: Optional[Callable] = None,  # eager-mode hooks
         free_fn: Optional[Callable] = None,
         compute_limit: float = float("inf"),
+        allocator=None,                     # repro.alloc.PoolAllocator | None
     ) -> None:
         assert dealloc in ("ignore", "eager", "banish")
         self.budget = float(budget)
@@ -132,6 +133,13 @@ class DTRRuntime:
         if hasattr(heuristic, "bind"):
             heuristic.bind(self)
 
+        # Optional fragmentation-aware backend: storages map onto contiguous
+        # blocks of a simulated address space, and eviction under pressure
+        # selects a contiguous window (repro.alloc).  None => byte counter.
+        self.allocator = allocator
+        if allocator is not None:
+            allocator.attach(self)
+
     # ------------------------------------------------------------------
     # Public API
     # ------------------------------------------------------------------
@@ -146,7 +154,7 @@ class DTRRuntime:
             s.uf = self.uf.make(0.0)
         self.tensors[tid] = t
         self.storages[sid] = s
-        self._alloc(size)
+        self._alloc_storages([s])
         return tid
 
     def call(
@@ -261,6 +269,10 @@ class DTRRuntime:
     def slowdown(self) -> float:
         return self.total_compute / max(self.base_compute, 1e-12)
 
+    def fragmentation(self):
+        """Allocator telemetry (``repro.alloc.FragStats``), None in counter mode."""
+        return self.allocator.stats() if self.allocator is not None else None
+
     # ------------------------------------------------------------------
     # Materialization
     # ------------------------------------------------------------------
@@ -345,7 +357,6 @@ class DTRRuntime:
             # Inputs are accessed by this op: update staleness metadata.
             for sid in in_sids:
                 self.storages[sid].last_access = self.clock
-            need = 0
             out_storages: list[StorageRec] = []
             for tid in op.output_tids:
                 t = self.tensors[tid]
@@ -353,9 +364,9 @@ class DTRRuntime:
                 if s.banished:
                     continue
                 if not t.is_alias and not s.resident:
-                    need += s.size
                     out_storages.append(s)
-            self._alloc(need, exclude={s.sid for s in out_storages})
+            self._alloc_storages(out_storages,
+                                 exclude={s.sid for s in out_storages})
             for s in out_storages:
                 s.resident = True
                 if not first:
@@ -397,6 +408,38 @@ class DTRRuntime:
     # ------------------------------------------------------------------
     # Allocation / eviction
     # ------------------------------------------------------------------
+    def _alloc_storages(self, storages: list[StorageRec],
+                        exclude: set[int] = frozenset()) -> None:
+        """Admit ``storages`` (not yet resident) into device memory.
+
+        Byte-counter mode (no allocator, or the allocator's fragmentation-free
+        compatibility mode) aggregates the sizes and runs the classic
+        globally-cheapest eviction loop — decisions are identical with or
+        without a pool attached.  Contiguous mode places each storage into a
+        contiguous block, evicting a minimal-cost contiguous window on a
+        failed fit.
+        """
+        if self.allocator is not None and self.allocator.contiguous:
+            placed: list[StorageRec] = []
+            try:
+                for s in storages:
+                    self.allocator.allocate(self, s, exclude)
+                    placed.append(s)
+            except BaseException:
+                # Roll back siblings placed before the failure: they are not
+                # yet resident, so nothing else will ever free their blocks.
+                for s in placed:
+                    self.allocator.free(s)
+                    self.memory -= s.size
+                raise
+            self.peak_memory = max(self.peak_memory, self.memory)
+            return
+        need = sum(s.size for s in storages)
+        self._alloc(need, exclude)
+        if self.allocator is not None:
+            for s in storages:
+                self.allocator.place(s)
+
     def _alloc(self, need: float, exclude: set[int] = frozenset()) -> None:
         if need <= 0:
             self.peak_memory = max(self.peak_memory, self.memory)
@@ -445,6 +488,8 @@ class DTRRuntime:
         self.memory -= s.size
         self.evictions += 1
         self._version += 1
+        if self.allocator is not None:
+            self.allocator.free(s)
         if self.free_fn is not None:
             self.free_fn(s)
         if self.uf is not None:
@@ -475,6 +520,8 @@ class DTRRuntime:
             self.memory -= s.size
             for tid in s.tensor_tids:
                 self.tensors[tid].defined = False
+            if self.allocator is not None:
+                self.allocator.free(s)
             if self.free_fn is not None:
                 self.free_fn(s)
         s.resident = False

@@ -4,6 +4,12 @@ Replays a log at a list of memory budgets (absolute bytes or fractions of the
 unconstrained peak) for each heuristic, recording compute slowdown, eviction /
 remat counts, and metadata accesses; detects OOM (budget below feasibility)
 and thrashing (slowdown >= threshold).
+
+``alloc_mode`` selects the memory model: ``"counter"`` (default) is the
+paper's fungible byte counter; ``"pool"`` maps storages onto a simulated
+address space requiring contiguous fits with window eviction
+(``repro.alloc``); ``"pool_nofrag"`` keeps counter semantics bit-for-bit but
+tracks block placement for fragmentation telemetry.
 """
 from __future__ import annotations
 
@@ -12,6 +18,8 @@ from dataclasses import dataclass, field
 from .graph import Log, replay
 from .heuristics import Heuristic, by_name
 from .runtime import DTRRuntime, OOMError, ThrashError
+
+ALLOC_MODES = ("counter", "pool", "pool_nofrag")
 
 
 @dataclass
@@ -27,6 +35,33 @@ class RunResult:
     meta_accesses: int = 0
     peak_memory: float = 0.0
     error: str = ""
+    # Fragmentation telemetry (pool-backed runs; zeros in counter mode).
+    largest_free: float = 0.0
+    frag_ratio: float = 0.0
+    failed_fits: int = 0
+    evict_windows: int = 0
+
+
+def make_allocator(alloc_mode: str | None, placement: str = "best_fit"):
+    """Build the allocator backend for ``alloc_mode`` (None/'counter' => None)."""
+    if alloc_mode in (None, "counter"):
+        return None
+    from ..alloc import PoolAllocator
+    if alloc_mode == "pool":
+        return PoolAllocator(placement=placement, contiguous=True)
+    if alloc_mode == "pool_nofrag":
+        return PoolAllocator(placement=placement, contiguous=False)
+    raise ValueError(f"unknown alloc_mode {alloc_mode!r}; "
+                     f"expected one of {ALLOC_MODES}")
+
+
+def _frag_fields(rt: DTRRuntime) -> dict:
+    frag = rt.fragmentation()
+    if frag is None:
+        return {}
+    return dict(largest_free=frag.largest_free, frag_ratio=frag.frag_ratio,
+                failed_fits=frag.failed_fits,
+                evict_windows=frag.evict_windows)
 
 
 @dataclass
@@ -35,6 +70,7 @@ class SweepResult:
     heuristic: str
     baseline_peak: float
     runs: list[RunResult] = field(default_factory=list)
+    alloc_mode: str = "counter"
 
     def last_ok_before_thrash(self, thresh: float = 2.0) -> float | None:
         """Smallest budget fraction with slowdown < thresh (paper's dashed line)."""
@@ -59,12 +95,15 @@ def simulate(
     sample_sqrt: bool = False,
     seed: int = 0,
     thrash_factor: float = 50.0,
+    alloc_mode: str | None = None,
+    placement: str = "best_fit",
 ) -> RunResult:
     h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
     rt = DTRRuntime(budget=budget, heuristic=h, dealloc=dealloc,
                     ignore_small_frac=ignore_small_frac,
                     sample_sqrt=sample_sqrt, seed=seed,
-                    compute_limit=thrash_factor * log.baseline_cost())
+                    compute_limit=thrash_factor * log.baseline_cost(),
+                    allocator=make_allocator(alloc_mode, placement))
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
@@ -75,14 +114,15 @@ def simulate(
                          ops_executed=rt.ops_executed,
                          peak_memory=rt.peak_memory,
                          meta_accesses=rt.meta_accesses
-                         + (rt.uf.accesses if rt.uf else 0))
+                         + (rt.uf.accesses if rt.uf else 0),
+                         **_frag_fields(rt))
     return RunResult(
         budget=budget, ok=True, slowdown=rt.slowdown(),
         compute=rt.total_compute, base_compute=rt.base_compute,
         evictions=rt.evictions, remat_ops=rt.remat_ops,
         ops_executed=rt.ops_executed,
         meta_accesses=rt.meta_accesses + (rt.uf.accesses if rt.uf else 0),
-        peak_memory=rt.peak_memory)
+        peak_memory=rt.peak_memory, **_frag_fields(rt))
 
 
 def sweep(
@@ -91,14 +131,17 @@ def sweep(
     fractions: list[float],
     dealloc: str = "eager",
     seed: int = 0,
+    alloc_mode: str | None = None,
+    placement: str = "best_fit",
 ) -> SweepResult:
     peak, _ = measure_baseline(log)
     out = SweepResult(log_name=log.name, heuristic=heuristic,
-                      baseline_peak=peak)
+                      baseline_peak=peak, alloc_mode=alloc_mode or "counter")
     for f in fractions:
         # Fresh heuristic per run (h_rand carries RNG state; h_eq carries UF).
         out.runs.append(
             simulate(log, by_name(heuristic, seed), budget=f * peak,
-                     dealloc=dealloc, seed=seed))
+                     dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
+                     placement=placement))
         out.runs[-1].budget = f  # report as fraction
     return out

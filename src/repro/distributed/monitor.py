@@ -91,6 +91,65 @@ class DivergenceGuard:
         return "ok"
 
 
+@dataclass
+class MemorySample:
+    step: int
+    peak_bytes: float
+    used_bytes: float = 0.0
+    largest_free: float = 0.0
+    frag_ratio: float = 0.0
+    failed_fits: int = 0
+    evict_windows: int = 0
+    has_frag: bool = False          # frag fields valid (allocator telemetry)
+
+
+@dataclass
+class MemoryMonitor:
+    """Memory telemetry for launch-time dashboards.
+
+    Tracks peak bytes per step and, when a fragmentation-aware allocator is
+    active (``repro.alloc``), the pool's health: largest free block (the
+    number that actually bounds the next allocation, not free bytes),
+    external-fragmentation ratio, failed contiguous fits, and window
+    evictions.  ``frag`` accepts a ``repro.alloc.FragStats`` or any object
+    with those attributes; dashboards alert on ``largest_free`` collapsing
+    while free bytes look healthy — the failure mode byte counters miss."""
+    history: list[MemorySample] = field(default_factory=list)
+    peak_bytes: float = field(default=0.0, init=False)
+
+    def record(self, step: int, peak_bytes: float,
+               frag=None) -> MemorySample:
+        sample = MemorySample(step=step, peak_bytes=peak_bytes)
+        if frag is not None:
+            sample.has_frag = True
+            sample.used_bytes = getattr(frag, "used", 0.0)
+            sample.largest_free = getattr(frag, "largest_free", 0.0)
+            sample.frag_ratio = getattr(frag, "frag_ratio", 0.0)
+            sample.failed_fits = getattr(frag, "failed_fits", 0)
+            sample.evict_windows = getattr(frag, "evict_windows", 0)
+        self.peak_bytes = max(self.peak_bytes, peak_bytes)
+        self.history.append(sample)
+        return sample
+
+    def summary(self) -> dict:
+        """Aggregate for dashboards: peak bytes + worst fragmentation seen.
+
+        Fragmentation fields aggregate only over samples that carried
+        allocator telemetry — a telemetry-less run (CPU backend) must not
+        read as largest-free-block collapse.  None when never recorded."""
+        frag = [s for s in self.history if s.has_frag]
+        last = frag[-1] if frag else None
+        return {
+            "peak_bytes": self.peak_bytes,
+            "min_largest_free": (min(s.largest_free for s in frag)
+                                 if frag else None),
+            "max_frag_ratio": (max(s.frag_ratio for s in frag)
+                               if frag else None),
+            "failed_fits": last.failed_fits if last else 0,
+            "evict_windows": last.evict_windows if last else 0,
+        }
+
+
 class Timer:
     def __enter__(self):
         self.t0 = time.perf_counter()

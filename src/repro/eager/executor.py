@@ -72,11 +72,18 @@ class DTRContext:
 
     def __init__(self, budget_bytes: float, heuristic: str = "h_dtr_eq",
                  dealloc: str = "eager", use_wallclock_cost: bool = True,
-                 seed: int = 0):
+                 seed: int = 0, alloc_mode: str | None = None,
+                 placement: str = "best_fit"):
+        # alloc_mode="pool" maps the real JAX buffers onto simulated pool
+        # accounting: every resident storage occupies a contiguous block and
+        # memory pressure evicts contiguous windows (repro.alloc), so eager
+        # runs report the fragmentation a real device allocator would see.
+        from ..core.simulator import make_allocator
         self.rt = DTRRuntime(
             budget=float(budget_bytes), heuristic=by_name(heuristic, seed),
             dealloc=dealloc,
-            materialize_fn=self._on_perform, free_fn=self._on_free)
+            materialize_fn=self._on_perform, free_fn=self._on_free,
+            allocator=make_allocator(alloc_mode, placement))
         self.buffers: dict[int, jax.Array] = {}     # tid -> concrete array
         self.closures: dict[int, Callable] = {}     # op_id -> replay fn
         self.use_wallclock_cost = use_wallclock_cost
@@ -130,6 +137,10 @@ class DTRContext:
         self._pending_outputs = None
         return [DTRArray(self, tid, o.shape, o.dtype)
                 for tid, o in zip(tids, outs)]
+
+    def fragmentation(self):
+        """Pool telemetry (``repro.alloc.FragStats``); None in counter mode."""
+        return self.rt.fragmentation()
 
     def live_bytes(self) -> int:
         """Actual bytes held in resident buffers (for budget verification)."""

@@ -26,7 +26,8 @@ import numpy as np
 from repro import configs
 from repro.ckpt import CheckpointManager
 from repro.data.pipeline import Prefetcher, SyntheticLM
-from repro.distributed.monitor import DivergenceGuard, StragglerMonitor, Timer
+from repro.distributed.monitor import (DivergenceGuard, MemoryMonitor,
+                                       StragglerMonitor, Timer)
 from repro.distributed.sharding import mesh_context
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.launch.steps import make_train_step, state_shardings
@@ -92,7 +93,31 @@ def main(argv=None):
         ckpt = CheckpointManager(args.ckpt_dir,
                                  every_steps=args.ckpt_every, keep=2)
         monitor = StragglerMonitor()
+        memmon = MemoryMonitor()
         guard = DivergenceGuard()
+
+        from repro.alloc import FragStats
+        dev0 = jax.local_devices()[0]
+
+        def device_memory():
+            """(peak_bytes, frag_stats|None) from the device allocator.
+
+            ``memory_stats`` exposes largest_free_block on TPU/GPU backends;
+            CPU returns None — telemetry degrades to peak-bytes only."""
+            stats = (dev0.memory_stats() or {}
+                     if hasattr(dev0, "memory_stats") else {})
+            peak = stats.get("peak_bytes_in_use", 0)
+            frag = None
+            if "largest_free_block_bytes" in stats:
+                limit = stats.get("bytes_limit", 0)
+                used = stats.get("bytes_in_use", 0)
+                free = max(limit - used, 0)
+                largest = stats["largest_free_block_bytes"]
+                frag = FragStats(
+                    capacity=limit, used=used, free=free,
+                    largest_free=largest,
+                    frag_ratio=(1 - largest / free) if free else 0.0)
+            return peak, frag
 
         start, restored, extra = ckpt.restore(
             {"params": params, "opt": opt_state})
@@ -128,15 +153,28 @@ def main(argv=None):
                     continue
                 params, opt_state = new_p, new_o
                 st = monitor.record(step, t.seconds, loss, gn)
+                peak_bytes, frag = device_memory()
+                ms = memmon.record(step, peak_bytes, frag=frag)
                 if step % 10 == 0 or step == args.steps - 1:
+                    mem = (f" mem {peak_bytes/1e6:.0f}MB"
+                           if peak_bytes else "")
+                    if frag is not None:
+                        mem += (f" free_blk {ms.largest_free/1e6:.0f}MB"
+                                f" frag {ms.frag_ratio:.2f}")
                     print(f"step {step:5d} loss {loss:8.4f} "
                           f"gnorm {gn:7.3f} {t.seconds*1e3:6.0f} ms"
+                          + mem
                           + (" [straggler]" if st.flagged else ""),
                           flush=True)
                 ckpt.maybe_save(step, {"params": params, "opt": opt_state},
                                 extra={"data_step": step})
         finally:
             prefetch.stop()
+        ms = memmon.summary()
+        frag_note = ("" if ms["min_largest_free"] is None else
+                     f" min_free_blk {ms['min_largest_free']/1e6:.0f}MB"
+                     f" max_frag {ms['max_frag_ratio']:.2f}")
+        print(f"mem summary: peak {ms['peak_bytes']/1e6:.0f}MB" + frag_note)
     print("done")
 
 

@@ -1,0 +1,341 @@
+"""Tests for repro.alloc: pool invariants, window eviction, model parity."""
+import random
+
+import pytest
+
+from repro.alloc import FragStats, MemoryPool, PoolAllocator
+from repro.core import graphs, simulator
+from repro.core.heuristics import by_name, window_cost
+from repro.core.runtime import DTRRuntime, OOMError
+from repro.distributed.monitor import MemoryMonitor
+
+
+# ---------------------------------------------------------------------------
+# MemoryPool: split / coalesce / placement invariants
+# ---------------------------------------------------------------------------
+
+class TestPool:
+    def test_split_and_coalesce(self):
+        p = MemoryPool(100)
+        assert p.alloc(1, 30) and p.alloc(2, 30) and p.alloc(3, 30)
+        p.check()
+        assert p.free_bytes() == 10 and p.largest_free_block() == 10
+        p.free(2)                      # hole between 1 and 3
+        p.check()
+        assert p.free_bytes() == 40
+        assert p.largest_free_block() == 30
+        assert p.n_free_blocks() == 2
+        p.free(1)                      # coalesces with the hole
+        p.check()
+        assert p.largest_free_block() == 60
+        p.free(3)                      # back to a single free block
+        p.check()
+        assert p.n_free_blocks() == 1 and p.largest_free_block() == 100
+
+    def test_contiguity_denied_despite_free_bytes(self):
+        """The defining gap vs a byte counter: 40 free, no 40-fit."""
+        p = MemoryPool(100)
+        for sid in (1, 2, 3, 4, 5):
+            assert p.alloc(sid, 20)
+        p.free(2)
+        p.free(4)                      # two scattered 20-byte holes
+        assert p.free_bytes() == 40
+        assert not p.alloc(9, 40)      # counter model would say yes
+        assert p.stats().failed_fits == 1
+        assert p.alloc(9, 20)          # a hole-sized fit works
+        p.check()
+
+    def test_best_fit_prefers_tightest_hole(self):
+        p = MemoryPool(100, placement="best_fit")
+        assert p.alloc(1, 40) and p.alloc(2, 10) and p.alloc(3, 30)
+        p.free(1)                      # 40-hole at 0, 20-hole at end
+        assert p.alloc(4, 15)
+        assert p.block_of(4).offset == 80   # tail hole is the tighter fit
+        p.check()
+
+    def test_first_fit_prefers_lowest_address(self):
+        p = MemoryPool(100, placement="first_fit")
+        assert p.alloc(1, 40) and p.alloc(2, 10) and p.alloc(3, 30)
+        p.free(1)
+        assert p.alloc(4, 15)
+        assert p.block_of(4).offset == 0
+        p.check()
+
+    def test_stream_placement_resumes_after_cursor(self):
+        p = MemoryPool(100, placement="stream")
+        assert p.alloc(1, 30) and p.alloc(2, 30)
+        p.free(1)                      # hole at the bottom
+        assert p.alloc(3, 10)          # cursor at 60: skips the bottom hole
+        assert p.block_of(3).offset == 60
+        assert p.alloc(4, 25)          # keeps streaming upward
+        assert p.block_of(4).offset == 70
+        assert p.alloc(5, 25)          # tail too small now: wraps to bottom
+        assert p.block_of(5).offset == 0
+        p.check()
+
+    def test_infinite_capacity(self):
+        p = MemoryPool(float("inf"))
+        for sid in range(50):
+            assert p.alloc(sid, 1000)
+        p.check()
+        assert p.largest_free_block() == float("inf")
+        assert p.external_frag() == 0.0
+
+    def test_compact_repacks_preserving_order(self):
+        p = MemoryPool(100)
+        for sid in (1, 2, 3):
+            assert p.alloc(sid, 25)
+        p.free(2)
+        p.compact()
+        p.check()
+        assert p.block_of(1).offset == 0
+        assert p.block_of(3).offset == 25
+        assert p.n_free_blocks() == 1 and p.largest_free_block() == 50
+
+    def test_randomized_invariants(self):
+        """Random alloc/free churn holds every structural invariant."""
+        rng = random.Random(1234)
+        p = MemoryPool(10_000)
+        live: dict[int, int] = {}
+        next_sid = 0
+        for _ in range(2000):
+            if live and rng.random() < 0.45:
+                sid = rng.choice(list(live))
+                p.free(sid)
+                del live[sid]
+            else:
+                size = rng.randint(1, 400)
+                if p.alloc(next_sid, size):
+                    live[next_sid] = size
+                next_sid += 1
+            p.check()
+        assert p.used == sum(live.values())
+
+    def test_stats_snapshot(self):
+        p = MemoryPool(100)
+        p.alloc(1, 50)
+        p.alloc(2, 20)
+        p.free(1)
+        st = p.stats()
+        assert isinstance(st, FragStats)
+        assert st.used == 20 and st.free == 80
+        assert st.largest_free == 50
+        assert st.frag_ratio == pytest.approx(1 - 50 / 80)
+        assert set(st.as_dict()) >= {"largest_free", "frag_ratio",
+                                     "failed_fits"}
+
+
+# ---------------------------------------------------------------------------
+# Contiguous-window eviction through the runtime
+# ---------------------------------------------------------------------------
+
+def pool_rt(budget, heuristic="h_lru", placement="first_fit", **kw):
+    return DTRRuntime(budget=budget, heuristic=by_name(heuristic),
+                      allocator=PoolAllocator(placement=placement), **kw)
+
+
+class TestWindowEviction:
+    def test_window_is_contiguous_and_cheapest(self):
+        """Address layout [c|a|b|d]; a 40-byte alloc must take an adjacent
+        pair, and LRU cost picks the stalest pair {a, b}."""
+        rt = pool_rt(100, heuristic="h_lru")
+        c = rt.constant(10)                    # [0, 10) pinned
+        (a,) = rt.call("f", 1.0, [c], [30])    # [10, 40)
+        (b,) = rt.call("g", 1.0, [c], [30])    # [40, 70)
+        (d,) = rt.call("h", 1.0, [c], [30])    # [70, 100)
+        (e,) = rt.call("k", 1.0, [c], [40])    # needs a 2-storage window
+        assert not rt.tensors[a].defined
+        assert not rt.tensors[b].defined
+        assert rt.tensors[d].defined           # freshest neighbor survives
+        assert rt.tensors[e].defined
+        blk = rt.allocator.pool.block_of(rt.tensors[e].sid)
+        assert (blk.offset, blk.size) == (10, 40)
+        assert rt.allocator.evict_windows == 1
+        rt.allocator.pool.check()
+
+    def test_fragmentation_oom_where_counter_succeeds(self):
+        """Pinned constants between evictables cap the largest window below
+        the request; the byte counter would have admitted it."""
+        def build(rt):
+            first = None
+            for i in range(3):                 # layout: c a c a c a
+                cc = rt.constant(10)
+                first = first if first is not None else cc
+                rt.call(f"f{i}", 1.0, [cc], [20])
+            return first
+
+        rt = pool_rt(100)
+        src = build(rt)
+        with pytest.raises(OOMError, match="contiguous"):
+            rt.call("big", 1.0, [src], [40])
+
+        rt2 = DTRRuntime(budget=100, heuristic=by_name("h_lru"))
+        src2 = build(rt2)
+        rt2.call("big", 1.0, [src2], [40])     # counter model: no problem
+
+    def test_failed_alloc_with_no_window_reports_frag(self):
+        rt = pool_rt(50)
+        c = rt.constant(40)
+        with pytest.raises(OOMError, match="largest_free"):
+            rt.call("f", 1.0, [c], [20])
+
+    def test_window_cost_helper_caches_and_counts(self):
+        rt = pool_rt(1000)
+        c = rt.constant(10)
+        (a,) = rt.call("f", 1.0, [c], [20])
+        (b,) = rt.call("g", 1.0, [c], [20])
+        sa = rt.storages[rt.tensors[a].sid]
+        sb = rt.storages[rt.tensors[b].sid]
+        cache = {}
+        before = rt.meta_accesses
+        c1 = window_cost(rt, rt.heuristic, [sa, sb], cache=cache)
+        assert rt.meta_accesses == before + 2
+        c2 = window_cost(rt, rt.heuristic, [sa, sb], cache=cache)
+        assert rt.meta_accesses == before + 2   # cache hit: no new accesses
+        assert c1 == c2 == pytest.approx(
+            cache[sa.sid] + cache[sb.sid])
+
+    def test_multi_output_oom_rolls_back_placed_siblings(self):
+        """If output N of a multi-output op cannot be placed, outputs placed
+        earlier in the batch must be released — they are not resident yet,
+        so nothing else would ever free their blocks."""
+        rt = pool_rt(100)
+        c = rt.constant(90)
+        with pytest.raises(OOMError):
+            rt.call("two", 1.0, [c], [10, 40])
+        assert rt.memory == 90
+        assert rt.allocator.pool.used == 90
+        rt.allocator.pool.check()
+        # Retrying the access fails cleanly again (no leaked placement).
+        out1 = rt.ops[0].output_tids[0]
+        with pytest.raises(OOMError):
+            rt.get(out1)
+
+    def test_locked_storages_break_windows(self):
+        """Op inputs are locked during allocation; the window planner must
+        treat them as barriers, never evicting what the op is reading."""
+        rt = pool_rt(100, heuristic="h_size")
+        c = rt.constant(10)
+        (a,) = rt.call("f", 1.0, [c], [45])
+        (b,) = rt.call("g", 1.0, [c], [45])
+        # g2 reads a (locked during perform); only b is evictable.
+        (d,) = rt.call("g2", 1.0, [a], [45])
+        assert rt.tensors[a].defined
+        assert not rt.tensors[b].defined
+        rt.allocator.pool.check()
+
+
+# ---------------------------------------------------------------------------
+# Counter-model parity and model-graph sweeps
+# ---------------------------------------------------------------------------
+
+PARITY_FIELDS = ("ok", "compute", "base_compute", "evictions", "remat_ops",
+                 "ops_executed", "meta_accesses", "peak_memory")
+
+
+class TestParityAndSweeps:
+    @pytest.mark.parametrize("mk", [
+        lambda: graphs.linear_network(60),
+        lambda: graphs.mlp(depth=8),
+    ])
+    @pytest.mark.parametrize("frac", [0.9, 0.6, 0.4])
+    def test_nofrag_pool_bitexact_with_counter(self, mk, frac):
+        log = mk()
+        peak, _ = simulator.measure_baseline(log)
+        a = simulator.simulate(log, "h_dtr_eq", budget=frac * peak)
+        b = simulator.simulate(log, "h_dtr_eq", budget=frac * peak,
+                               alloc_mode="pool_nofrag")
+        for f in PARITY_FIELDS:
+            assert getattr(a, f) == getattr(b, f), f
+
+    def test_pool_never_beats_counter_feasibility(self):
+        """Contiguity is a strictly harder constraint: any budget feasible
+        under the pool model is feasible under the counter model."""
+        log = graphs.mlp(depth=8)
+        peak, _ = simulator.measure_baseline(log)
+        for frac in (0.8, 0.5, 0.35):
+            pool = simulator.simulate(log, "h_dtr_eq", budget=frac * peak,
+                                      alloc_mode="pool")
+            counter = simulator.simulate(log, "h_dtr_eq",
+                                         budget=frac * peak)
+            if pool.ok:
+                assert counter.ok
+                assert counter.compute <= pool.compute + 1e-9
+
+    @pytest.mark.parametrize("placement", ["best_fit", "first_fit", "stream"])
+    def test_pool_sweep_models_complete(self, placement):
+        log = graphs.resnet(blocks=6)
+        sw = simulator.sweep(log, "h_dtr_eq", [1.0, 0.7, 0.5],
+                             alloc_mode="pool", placement=placement)
+        assert sw.alloc_mode == "pool"
+        assert any(r.ok for r in sw.runs)
+        tight = [r for r in sw.runs if r.ok and r.evict_windows > 0]
+        assert tight, "pressure run should use window eviction"
+        for r in tight:
+            assert 0.0 <= r.frag_ratio <= 1.0
+
+    def test_budget_respected_under_pool(self):
+        log = graphs.mlp(depth=8)
+        peak, _ = simulator.measure_baseline(log)
+        r = simulator.simulate(log, "h_dtr_eq", budget=0.6 * peak,
+                               alloc_mode="pool")
+        assert r.ok and r.peak_memory <= 0.6 * peak + 1e-6
+
+    @pytest.mark.parametrize("mode", ["counter", "pool", "pool_nofrag"])
+    def test_zero_budget_fails_gracefully(self, mode):
+        """Budget probes down to 0 must report OOM, not crash (all modes)."""
+        log = graphs.mlp(depth=4)
+        r = simulator.simulate(log, "h_dtr_eq", budget=0.0, alloc_mode=mode)
+        assert not r.ok and r.error
+
+    def test_unknown_alloc_mode_rejected(self):
+        with pytest.raises(ValueError, match="alloc_mode"):
+            simulator.make_allocator("arena")
+
+
+# ---------------------------------------------------------------------------
+# Eager executor over the pool + monitoring surface
+# ---------------------------------------------------------------------------
+
+class TestEagerPool:
+    def test_eager_pool_remats_and_reports_frag(self):
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.eager.executor import DTRContext
+
+        ctx = DTRContext(budget_bytes=6 * 4 * 64, heuristic="h_dtr_eq",
+                         use_wallclock_cost=False, alloc_mode="pool")
+        x = ctx.wrap(jnp.ones(64, jnp.float32))
+        h = x
+        outs = []
+        for _ in range(10):
+            h = ctx.call("mul", jnp.multiply, [h, h])[0]
+            outs.append(h)
+        assert ctx.rt.evictions > 0
+        v = outs[0].value              # rematerializes through the pool
+        assert float(v[0]) == 1.0
+        frag = ctx.fragmentation()
+        assert frag is not None and frag.capacity == 6 * 4 * 64
+        ctx.rt.allocator.pool.check()
+
+    def test_memory_monitor_surfaces_frag(self):
+        mon = MemoryMonitor()
+        mon.record(0, peak_bytes=100.0)
+        st = FragStats(capacity=100, used=60, free=40, largest_free=10,
+                       frag_ratio=0.75, failed_fits=2, evict_windows=1)
+        s = mon.record(1, peak_bytes=90.0, frag=st)
+        assert s.largest_free == 10 and s.frag_ratio == 0.75
+        summary = mon.summary()
+        assert summary["peak_bytes"] == 100.0
+        assert summary["max_frag_ratio"] == 0.75
+        # Telemetry-less (counter-mode) samples must not drag frag
+        # aggregates to zero — that would read as largest-free collapse.
+        assert summary["min_largest_free"] == 10
+        assert summary["failed_fits"] == 2
+
+    def test_memory_monitor_without_telemetry(self):
+        mon = MemoryMonitor()
+        mon.record(0, peak_bytes=50.0)
+        s = mon.summary()
+        assert s["peak_bytes"] == 50.0
+        assert s["min_largest_free"] is None
+        assert s["max_frag_ratio"] is None

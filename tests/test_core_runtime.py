@@ -2,7 +2,11 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis is optional: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st  # noqa: F401
 
 from repro.core import graphs, simulator
 from repro.core.graph import Log, LogBuilder, replay
