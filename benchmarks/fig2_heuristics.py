@@ -6,6 +6,12 @@ heuristics and budget fractions; also covers the Appendix D.1 ablation grid
 
 Emits CSV rows: model,heuristic,budget_frac,ok,slowdown,evictions,remats,
 meta_accesses.
+
+Runs under the incremental eviction index (the default engine): slowdown /
+evictions / remats are bit-identical to the linear scan, and the sweep is
+several times faster.  The meta_accesses column therefore reflects the
+indexed engine's accounting; use benchmarks/fig4_overhead.py (pinned to
+index=False) for the paper's App. D.3 metadata-overhead comparison.
 """
 from __future__ import annotations
 

@@ -27,9 +27,19 @@ def run_meta_accesses():
                        lambda: graphs.transformer(layers=8, d=32, seq=16))):
         log = fn()
         peak, _ = simulator.measure_baseline(log)
+        # index=False throughout so every cell runs ONE engine (the linear
+        # scan) — the eviction index, and the automatic scan fallback the
+        # E.2 sampling modes would take, would mix two engines into one
+        # comparison.  Note the scan itself now uses scoped (per-component)
+        # e*/eq cache invalidation, so absolute counts sit below the
+        # seed's global-invalidation numbers; the *relative* separations
+        # (h_dtr >> h_dtr_eq >> h_dtr_local, exact vs E.2 sampling) are
+        # what reproduce App. D.3.  benchmarks/perf_runtime.py is the
+        # scan-vs-index study.
         for h in ("h_dtr", "h_dtr_eq", "h_dtr_local"):
             for frac in (0.6, 0.4):
-                r = simulator.simulate(log, by_name(h), budget=frac * peak)
+                r = simulator.simulate(log, by_name(h), budget=frac * peak,
+                                       index=False)
                 rows.append(dict(
                     bench="meta", model=mname, heuristic=h, budget=frac,
                     ok=r.ok, meta_accesses=r.meta_accesses,
@@ -41,7 +51,7 @@ def run_meta_accesses():
                 (dict(sample_sqrt=True), "sqrt_sample"),
                 (dict(ignore_small_frac=0.01, sample_sqrt=True), "both")):
             r = simulator.simulate(log, by_name("h_dtr_eq"),
-                                   budget=0.5 * peak, **opts)
+                                   budget=0.5 * peak, index=False, **opts)
             rows.append(dict(
                 bench="e2_opts", model=mname, heuristic=f"h_dtr_eq/{tag}",
                 budget=0.5, ok=r.ok, meta_accesses=r.meta_accesses,

@@ -1,0 +1,172 @@
+"""Victim-selection performance benchmark (the eviction-index trajectory).
+
+Measures, for each workload x heuristic, the wall-clock spent *inside*
+``DTRRuntime._pick_victim`` (victim selection only), total run wall-clock,
+``meta_accesses``, and evictions/sec — once with the incremental eviction
+index (``index=True``, the default) and once with the exhaustive
+linear-scan oracle (``index=False``).  Both runs are asserted bit-exact
+(same evictions / compute / peak) before any ratio is reported, so a
+speedup can never come from making different decisions.
+
+Workloads: N-op linear chains (the App. A.1 family; the 1000-op chain at
+budget fraction 0.3 is the headline configuration) plus the
+resnet / unet / transformer / treelstm model logs.
+
+Emits ``BENCH_runtime.json``::
+
+    {"headline": {...},            # chain-1000 @ 0.3 summary per heuristic
+     "rows": [...],                # every measured cell
+     "equivalence_failures": 0}
+
+``--smoke`` runs a reduced grid (fast enough for CI) and exits nonzero on
+any oracle-equivalence mismatch.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from repro.core import graphs, simulator
+from repro.core.graph import replay
+from repro.core.heuristics import by_name
+from repro.core.runtime import DTRRuntime, OOMError, ThrashError
+
+PARITY_FIELDS = ("evictions", "total_compute", "base_compute", "remat_ops",
+                 "ops_executed", "peak_memory")
+
+
+def _timed_run(log, heuristic, budget, index, thrash_factor=50.0):
+    """One replay; returns (run_wall_s, pick_wall_s, runtime)."""
+    rt = DTRRuntime(budget=budget, heuristic=by_name(heuristic),
+                    compute_limit=thrash_factor * log.baseline_cost(),
+                    index=index)
+    pick_time = [0.0]
+    inner = rt._pick_victim
+
+    def timed_pick(exclude):
+        t0 = time.perf_counter()
+        victim = inner(exclude)
+        pick_time[0] += time.perf_counter() - t0
+        return victim
+
+    rt._pick_victim = timed_pick
+    t0 = time.perf_counter()
+    ok, err = True, ""
+    try:
+        replay(log, rt)
+    except (OOMError, ThrashError) as e:
+        ok, err = False, str(e)
+    return dict(wall_s=time.perf_counter() - t0, pick_s=pick_time[0],
+                ok=ok, error=err, rt=rt)
+
+
+def bench_cell(log, name, heuristic, frac, peak, rows):
+    """Measure oracle vs index on one (log, heuristic, frac) cell."""
+    oracle = _timed_run(log, heuristic, frac * peak, index=False)
+    indexed = _timed_run(log, heuristic, frac * peak, index=True)
+    mismatches = [f for f in PARITY_FIELDS
+                  if getattr(oracle["rt"], f) != getattr(indexed["rt"], f)]
+    if oracle["ok"] != indexed["ok"]:
+        mismatches.append("ok")
+    for mode, run in (("scan", oracle), ("index", indexed)):
+        rt = run["rt"]
+        rows.append(dict(
+            log=name, n_ops=log.op_count(), heuristic=heuristic,
+            budget=frac, mode=mode, ok=run["ok"],
+            wall_s=round(run["wall_s"], 6), pick_s=round(run["pick_s"], 6),
+            meta_accesses=rt.meta_accesses
+            + (rt.uf.accesses if rt.uf else 0),
+            evictions=rt.evictions,
+            evictions_per_s=round(rt.evictions / max(run["wall_s"], 1e-9)),
+            error=run["error"]))
+    def _meta(rt):
+        # Same quantity the per-mode rows report (uf hops included), so
+        # meta_reduction can be recomputed from the rows.
+        return rt.meta_accesses + (rt.uf.accesses if rt.uf else 0)
+
+    return dict(
+        log=name, heuristic=heuristic, budget=frac,
+        ok=oracle["ok"] and indexed["ok"],
+        pick_speedup=round(oracle["pick_s"] / max(indexed["pick_s"], 1e-9), 2),
+        wall_speedup=round(oracle["wall_s"] / max(indexed["wall_s"], 1e-9), 2),
+        meta_reduction=round(
+            _meta(oracle["rt"]) / max(_meta(indexed["rt"]), 1), 2),
+        equivalent=not mismatches, mismatched_fields=mismatches)
+
+
+def run(smoke=False):
+    if smoke:
+        chain_sizes = [200]
+        models = {"mlp": lambda: graphs.mlp(depth=8),
+                  "resnet": lambda: graphs.resnet(blocks=4)}
+        heuristics = ["h_dtr", "h_dtr_eq", "h_lru"]
+        fracs = [0.4]
+        headline_chain = 200
+    else:
+        chain_sizes = [250, 500, 1000, 2000]
+        models = {"resnet": lambda: graphs.resnet(blocks=24),
+                  "unet": lambda: graphs.unet(depth=5),
+                  "transformer": lambda: graphs.transformer(
+                      layers=8, d=32, seq=16),
+                  "treelstm": lambda: graphs.treelstm(depth=6)}
+        heuristics = ["h_dtr", "h_dtr_eq", "h_lru", "h_dtr_local",
+                      "h_size", "h_msps", "h_estar"]
+        fracs = [0.3]
+        headline_chain = 1000
+
+    rows, summaries = [], []
+    for n in chain_sizes:
+        log = graphs.linear_network(n)
+        peak, _ = simulator.measure_baseline(log)
+        for h in heuristics:
+            for frac in fracs:
+                summaries.append(
+                    bench_cell(log, f"chain{n}", h, frac, peak, rows))
+    for mname, fn in models.items():
+        log = fn()
+        peak, _ = simulator.measure_baseline(log)
+        for h in heuristics[:3] if not smoke else heuristics:
+            summaries.append(bench_cell(log, mname, h, 0.5, peak, rows))
+
+    headline = {
+        s["heuristic"]: dict(pick_speedup=s["pick_speedup"],
+                             wall_speedup=s["wall_speedup"],
+                             meta_reduction=s["meta_reduction"],
+                             equivalent=s["equivalent"])
+        for s in summaries
+        if s["log"] == f"chain{headline_chain}" and s["budget"] == fracs[0]}
+    failures = [s for s in summaries if not s["equivalent"]]
+    return dict(headline_chain=f"chain{headline_chain}@{fracs[0]}",
+                headline=headline, summaries=summaries, rows=rows,
+                equivalence_failures=len(failures))
+
+
+def main(argv=()):
+    smoke = "--smoke" in argv
+    out_path = "BENCH_runtime.json"
+    for i, a in enumerate(argv):
+        if a == "--out" and i + 1 < len(argv):
+            out_path = argv[i + 1]
+    report = run(smoke=smoke)
+    with open(out_path, "w") as f:
+        json.dump(report, f, indent=1)
+    print(f"# wrote {out_path}")
+    print("log,heuristic,budget,pick_speedup,wall_speedup,"
+          "meta_reduction,equivalent")
+    for s in report["summaries"]:
+        print(",".join(str(s[k]) for k in
+                       ("log", "heuristic", "budget", "pick_speedup",
+                        "wall_speedup", "meta_reduction", "equivalent")))
+    if report["equivalence_failures"]:
+        print(f"FAIL: {report['equivalence_failures']} cell(s) broke "
+              f"oracle equivalence")
+        return 1
+    print(f"headline ({report['headline_chain']}): "
+          + " ".join(f"{h}={v['pick_speedup']}x"
+                     for h, v in sorted(report["headline"].items())))
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    raise SystemExit(main(sys.argv[1:]))

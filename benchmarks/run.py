@@ -103,6 +103,20 @@ def fig_fragmentation():
                   lambda: list(m.run()["models"].values()), derive)
 
 
+def perf_runtime():
+    from . import perf_runtime as m
+
+    def derive(rows):
+        head = rows[0]["headline"]
+        if rows[0]["equivalence_failures"]:
+            return f"EQUIVALENCE FAILURES={rows[0]['equivalence_failures']}"
+        parts = [f"{h}={v['pick_speedup']}x" for h, v in sorted(head.items())]
+        return (f"pick_speedup[{rows[0]['headline_chain']}] "
+                + " ".join(parts))
+
+    return _timed("perf_runtime", lambda: [m.run(smoke=True)], derive)
+
+
 def roofline():
     from . import roofline as m
 
@@ -124,6 +138,7 @@ def main() -> None:
     fig5_theorem()
     table1_maxinput()
     fig_fragmentation()
+    perf_runtime()
     roofline()
 
 

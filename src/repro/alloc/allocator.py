@@ -129,7 +129,12 @@ class PoolAllocator:
                 return True
             return s.evictable() and s.sid not in exclude
 
-        cache: dict[int, float] = {}
+        # With an eviction index attached, window_cost reads the index's
+        # shared per-storage score memo (same values and meta-access
+        # accounting as victim selection); the ad-hoc per-pass dict is only
+        # needed for index-less (oracle) runtimes.
+        cache: Optional[dict[int, float]] = (
+            None if getattr(rt, "index", None) is not None else {})
 
         def score(k: int) -> float:
             s = storages[k]

@@ -3,17 +3,19 @@
 Layers:
   runtime     — greedy online eviction/rematerialization engine (App. C)
   heuristics  — h_DTR family + caching/checkpointing baselines (Sec. 4.1)
+  evict_index — incremental eviction index: sublinear victim selection
   graph       — operator log format + replay (App. C.6)
   graphs      — synthetic model graphs incl. Thm 3.1/3.2 families
-  simulator   — budget sweep harness (Fig. 2/3)
+  simulator   — budget sweep harness (Fig. 2/3) + parallel sweep driver
   baselines   — static checkpointing planners (Fig. 3)
   planner     — trace-time DTR plan -> jax.checkpoint policy (TPU-native form)
 """
+from .evict_index import EvictIndex, ScopedInvalidator
 from .graph import Log, LogBuilder, replay
 from .heuristics import by_name as heuristic_by_name
 from .runtime import DTRRuntime, OOMError
 
 __all__ = [
     "Log", "LogBuilder", "replay", "DTRRuntime", "OOMError",
-    "heuristic_by_name",
+    "EvictIndex", "ScopedInvalidator", "heuristic_by_name",
 ]

@@ -1,0 +1,508 @@
+"""Incremental eviction index: sublinear victim selection for the DTR runtime.
+
+The paper's own overhead analysis (App. C.5/D.3) concedes that victim
+selection dominates runtime cost: the naive engine rebuilds the candidate
+list from *all* storages and re-scores every one on *every* eviction, and a
+global version counter discards every cached ``e*`` neighborhood on every
+evict/remat.  This module replaces both with incremental structures:
+
+``ScopedInvalidator``
+    Tracks *evicted connected components* (the same merge-on-evict /
+    phantom-on-remat approximation the paper uses for ``h_DTR^eq``) in a
+    lightweight epoch-based union-find, plus a per-component **subscriber
+    set**: the resident storages whose cached neighborhood costs were
+    computed through that component.  An evict/remat then invalidates only
+    the caches in the affected component — not the whole table.  The scope
+    is a sound over-approximation: phantom connections left by remats can
+    widen a component (extra invalidations), never narrow it (a cached
+    value is dropped whenever any storage it summed over changes state).
+
+``EvictIndex``
+    A live evictable-storage set maintained on state transitions (storage
+    field writes notify the index; no per-eviction rebuild), with
+    **verified lazy heaps** over the staleness-free part of the heuristic
+    score.  Separable heuristics declare ``score = key(S) / staleness(S)``
+    (or ``score = key(S)`` for staleness-free heuristics); ``key`` only
+    changes on discrete events (evict / remat / banish / alias
+    registration), so heap entries stay valid as the clock advances.
+    Staleness-free heuristics use a single min-heap popped in key order.
+    Staleness-aware heuristics bucket candidates into geometric key bands
+    (quarter-octave: keys within a band differ by less than 2^(1/4)),
+    each band a lazy min-heap over last-access times: a band whose floor
+    key over its oldest member's staleness exceeds the best score so far
+    is skipped whole in O(1), and inside a band the oldest-first walk
+    stops as soon as the floor-key bound passes the best.  Every candidate that survives
+    its bounds is *verified* — its exact score recomputed with the
+    heuristic's own formula — so the selected victim is *bit-exact* with
+    the linear scan's argmin, tie-breaking (lowest sid among equal scores,
+    i.e. first in ``storages`` iteration order) included.
+
+The linear scan remains in ``DTRRuntime._pick_victim`` as the reference
+oracle (``index=False``), and is also the automatic fallback for
+non-separable heuristics (``h_rand`` advances an RNG per evaluation) and
+for the ``sample_sqrt`` / ``ignore_small_frac`` approximations, whose
+sampling sequences the heap cannot reproduce.
+"""
+from __future__ import annotations
+
+import bisect
+import heapq
+from math import frexp as _frexp, ldexp as _ldexp
+from typing import Optional
+
+# Relative slack on the early-stop bound.  ``key`` is computed with a
+# different association of the same factors as ``score`` (e.g. ``(c/m)/t``
+# vs ``c/(m*t)``), so the two can differ by a few ulps; the bound must not
+# prune a storage whose exact score ties the current best within rounding.
+_BOUND_EPS = 1e-9
+_MIN_STALENESS = 1e-9  # mirrors DTRRuntime.staleness
+
+
+class _EpochUF:
+    """Identity-only union-find with epoch nodes (no splitting needed).
+
+    A storage gets a *fresh* node each time it is evicted, so a
+    rematerialized-then-re-evicted storage rejoins as a singleton and
+    merges with the *current* components of its neighbors; its old node
+    lingers as a phantom inside whatever component absorbed it, which only
+    widens invalidation scopes (sound).  Bookkeeping hops are not counted
+    as heuristic metadata accesses.
+    """
+
+    __slots__ = ("_parent",)
+
+    def __init__(self) -> None:
+        self._parent: list[int] = []
+
+    def make(self) -> int:
+        h = len(self._parent)
+        self._parent.append(h)
+        return h
+
+    def find(self, x: int) -> int:
+        p = self._parent
+        while p[x] != x:
+            p[x] = p[p[x]]
+            x = p[x]
+        return x
+
+    def union(self, a: int, b: int) -> int:
+        ra, rb = self.find(a), self.find(b)
+        if ra == rb:
+            return ra
+        # Union by index: keep the smaller root (deterministic, no rank).
+        if ra > rb:
+            ra, rb = rb, ra
+        self._parent[rb] = ra
+        return ra
+
+
+class ScopedInvalidator:
+    """Per-component dirty-sets for cached neighborhood costs.
+
+    The runtime calls :meth:`subscribe` while walking a closure ("the value
+    cached for ``consumer`` summed over evicted storage ``dep``") and the
+    event hooks on state transitions; invalidation drops exactly the cache
+    entries subscribed to the affected components plus the resident
+    neighbors of the transitioning storage.
+    """
+
+    def __init__(self, rt) -> None:
+        self.rt = rt
+        self._uf = _EpochUF()
+        self._node: dict[int, int] = {}       # sid -> current epoch node
+        self._subs: dict[int, set[int]] = {}  # root -> subscriber sids
+        self.invalidations = 0                # telemetry: entries dropped
+
+    # -- closure bookkeeping -------------------------------------------
+    def _node_of(self, sid: int) -> int:
+        n = self._node.get(sid)
+        if n is None:
+            n = self._uf.make()
+            self._node[sid] = n
+        return n
+
+    def subscribe(self, dep_sid: int, consumer_sid: int) -> None:
+        root = self._uf.find(self._node_of(dep_sid))
+        subs = self._subs.get(root)
+        if subs is None:
+            self._subs[root] = {consumer_sid}
+        else:
+            subs.add(consumer_sid)
+
+    # -- state-transition hooks ----------------------------------------
+    def on_evict(self, s) -> None:
+        """``s`` left residency (evicted, or created not-yet-materialized).
+
+        Gives ``s`` a fresh epoch node, merges it with the components of
+        its evicted neighbors, and invalidates (a) the subscribers of every
+        merged component — their closures can now extend through ``s`` —
+        and (b) the resident neighbors of ``s``, whose closures gain ``s``
+        itself.
+        """
+        rt = self.rt
+        node = self._uf.make()
+        self._node[s.sid] = node
+        dirty: set[int] = {s.sid}
+        for nsid in s.deps | s.children:
+            ns = rt.storages.get(nsid)
+            if ns is None or ns.banished:
+                continue
+            if ns.resident:
+                dirty.add(nsid)
+            else:
+                r = self._uf.find(self._node_of(nsid))
+                dirty |= self._subs.pop(r, set())
+                node = self._uf.union(node, r)
+        self._invalidate(dirty)
+
+    def on_unevict(self, s) -> None:
+        """``s`` left the evicted set (rematerialized or banished).
+
+        Every cached value that summed over ``s``'s component is stale;
+        the component may also split, which the union-find approximates by
+        leaving phantom members behind (over-invalidation only).
+        """
+        node = self._node.get(s.sid)
+        dirty: set[int] = {s.sid}
+        if node is not None:
+            r = self._uf.find(node)
+            dirty |= self._subs.pop(r, set())
+        self._invalidate(dirty)
+
+    def on_cost_change(self, s) -> None:
+        """``s.local_cost`` grew (alias registration) while ``s`` evicted:
+        cached closures summing over ``s`` hold the old cost."""
+        self.on_unevict(s)
+
+    def _invalidate(self, sids: set[int]) -> None:
+        rt = self.rt
+        estar, eq = rt._estar_cache, rt._eq_cache
+        idx = rt.index
+        self.invalidations += len(sids)
+        for sid in sids:
+            estar.pop(sid, None)
+            eq.pop(sid, None)
+            if idx is not None:
+                idx.mark_dirty(sid)
+
+
+
+
+class EvictIndex:
+    """Live evictable set + verified lazy heaps over heuristic keys.
+
+    Two organizations, chosen by the heuristic's declared decomposition:
+
+    * staleness-free (``score == key``): one min-heap over ``(key, sid)``;
+      selection pops in (key, sid) order and stops at the first key that
+      can neither beat the best score nor win its sid tie-break.
+    * staleness-aware (``score == key / staleness``): candidates live in
+      geometric key *bands* (band ``b`` holds keys in
+      ``[2^(b/GRAIN), 2^((b+1)/GRAIN))``), each band a min-heap over
+      ``(last_access, sid)``.  For a band, the floor key over its oldest
+      member's staleness lower-bounds every member's score, so selection
+      probes each band once (O(1) skip for hopeless bands), walks
+      most-promising bands first, and stops a band's oldest-first walk as
+      soon as the floor bound passes the best verified score.
+
+    All heap entries are lazy: membership changes, accesses, and key
+    invalidations never search the heaps — stale entries are recognized
+    and dropped at pop time (``_slot``/``_ver`` record the one canonical
+    live entry per storage).
+    """
+
+    #: bucket id for exact-zero keys (sorts before every real exponent)
+    _ZERO_BAND = -(1 << 30)
+    #: bands per key octave: band b holds keys in [2^(b/GRAIN), 2^((b+1)/GRAIN))
+    _GRAIN = 4
+
+    def __init__(self, rt) -> None:
+        self.rt = rt
+        self.heuristic = rt.heuristic
+        assert getattr(self.heuristic, "separable", False), (
+            f"{self.heuristic!r} does not declare a separable decomposition")
+        self.stale = bool(self.heuristic.uses_staleness)
+        self.members: set[int] = set()
+        self._dirty: set[int] = set()
+        # sid -> last computed key, present iff still valid.  Keys survive
+        # membership flaps (lock/unlock cycles around every operator) — the
+        # storage's heap entry simply goes dormant and revives — so only
+        # genuine invalidation events trigger recomputation.
+        self._keys: dict[int, float] = {}
+        # Shared score memo: sid -> (clock, last_access, score).  Consulted
+        # by pop-verification *and* ``heuristics.window_cost`` so the
+        # allocator's window planner and victim selection score (and count
+        # metadata accesses for) each storage identically.
+        self._scores: dict[int, tuple[float, float, float]] = {}
+        # Staleness-aware organization: key bands of (la, sid) heaps.
+        self._bands: dict[int, list[tuple[float, int]]] = {}
+        self._band_ids: list[int] = []    # sorted; bands are never removed
+        self._floors: dict[int, float] = {}            # band -> floor key
+        self._slot: dict[int, tuple[int, float]] = {}  # sid -> (band, la)
+        # Staleness-free organization: one (key, sid, version) heap.
+        self._kheap: list[tuple[float, int, int]] = []
+        self._ver: dict[int, int] = {}
+        # Telemetry.
+        self.picks = 0
+        self.pops = 0
+        self.key_recomputes = 0
+
+    # -- notifications --------------------------------------------------
+    def register(self, s) -> None:
+        """Attach a newly created storage to the index."""
+        s._index = self
+        self.on_storage_event(s, "resident")
+
+    def on_storage_event(self, s, name: str) -> None:
+        sid = s.sid
+        if name == "last_access":
+            if self.stale and sid in self.members and sid in self._keys:
+                self._place(sid, self._keys[sid], s.last_access)
+            return
+        if name == "local_cost":
+            # The staleness-free key depends on local_cost for every
+            # cost-aware heuristic.
+            self.mark_dirty(sid)
+            return
+        # resident / locks / pinned / banished / constant: membership.
+        now = (s.resident and not s.pinned and not s.banished
+               and s.locks == 0 and not s.constant and s.size > 0)
+        if now and sid not in self.members:
+            self.members.add(sid)
+            k = self._keys.get(sid)
+            if k is None:
+                self._dirty.add(sid)
+            elif self.stale:
+                self._place(sid, k, s.last_access)
+            # staleness-free: the dormant (k, sid, ver) entry revives.
+        elif not now and sid in self.members:
+            self.members.discard(sid)
+            self._dirty.discard(sid)
+            # Heap entries go dormant via the membership check on pop; the
+            # key itself stays valid unless an invalidation event drops it.
+
+    def mark_dirty(self, sid: int) -> None:
+        self._scores.pop(sid, None)
+        self._keys.pop(sid, None)
+        if sid in self.members:
+            self._dirty.add(sid)
+
+    # -- internal placement ---------------------------------------------
+    # Quarter-octave mantissa boundaries (frexp mantissas live in [0.5, 1)).
+    _Q = (0.5, 2.0 ** -0.75, 2.0 ** -0.5, 2.0 ** -0.25)
+
+    @classmethod
+    def _band_of(cls, k: float) -> int:
+        """Band id = GRAIN*exponent + quarter; its floor is <= k exactly
+        (mantissa thresholds are the same float constants ``_floor_of``
+        rescales with exact power-of-two multiplication)."""
+        if k <= 0.0:
+            return cls._ZERO_BAND
+        m, e = _frexp(k)
+        q = cls._Q
+        j = 3 if m >= q[3] else 2 if m >= q[2] else 1 if m >= q[1] else 0
+        return cls._GRAIN * e + j
+
+    def _floor_of(self, b: int) -> float:
+        f = self._floors.get(b)
+        if f is None:
+            if b == self._ZERO_BAND:
+                f = 0.0
+            else:
+                e, j = divmod(b, self._GRAIN)
+                f = _ldexp(self._Q[j], e)
+            self._floors[b] = f
+        return f
+
+    def _place(self, sid: int, k: float, la: float) -> None:
+        """Ensure the canonical band entry for ``sid`` is (band(k), la)."""
+        b = self._band_of(k)
+        if self._slot.get(sid) == (b, la):
+            return
+        heap = self._bands.get(b)
+        if heap is None:
+            heap = self._bands[b] = []
+            bisect.insort(self._band_ids, b)
+        heapq.heappush(heap, (la, sid))
+        self._slot[sid] = (b, la)
+
+    def _flush_dirty(self) -> None:
+        rt = self.rt
+        h = self.heuristic
+        for sid in self._dirty:
+            s = rt.storages[sid]
+            rt.meta_accesses += 1
+            self.key_recomputes += 1
+            k = h.key(rt, s)
+            self._keys[sid] = k
+            if self.stale:
+                self._place(sid, k, s.last_access)
+            else:
+                v = self._ver.get(sid, 0) + 1
+                self._ver[sid] = v
+                heapq.heappush(self._kheap, (k, sid, v))
+        self._dirty.clear()
+
+    # -- scoring --------------------------------------------------------
+    def cached_score(self, s) -> float:
+        """Exact current score of ``s``, memoized for the current instant.
+
+        A memo entry is valid only at the clock/last-access it was computed
+        at; any scoped invalidation drops the entry.  Fresh computations
+        count one metadata access (matching the linear scan's
+        per-evaluation accounting); hits count none.
+        """
+        rt = self.rt
+        sid = s.sid
+        hit = self._scores.get(sid)
+        # (mark_dirty pops the memo entry, so a surviving entry is valid
+        # even while the *key* is still pending recomputation.)
+        if (hit is not None and hit[0] == rt.clock
+                and hit[1] == s.last_access):
+            return hit[2]
+        rt.meta_accesses += 1
+        sc = self.heuristic.score(rt, s)
+        self._scores[sid] = (rt.clock, s.last_access, sc)
+        return sc
+
+    # -- selection ------------------------------------------------------
+    def pick(self, exclude: set[int]) -> Optional[object]:
+        """Bit-exact argmin of the heuristic over the candidate set.
+
+        Every candidate that is not excluded by an admissible lower bound
+        (band floor / staleness, or its own key) is *verified* by
+        recomputing its exact score with the heuristic's own formula, and
+        the verified minimum — ties broken to the lowest sid, the linear
+        scan's first-strictly-smaller rule over ``storages`` insertion
+        order — is returned.  The ``_BOUND_EPS`` slack on every bound
+        absorbs the ulp-level association difference between
+        ``key/staleness`` and the score formula, so near-ties are always
+        verified rather than pruned.
+        """
+        self._flush_dirty()
+        self.picks += 1
+        if self.stale:
+            return self._pick_banded(exclude)
+        return self._pick_keyed(exclude)
+
+    def _pick_banded(self, exclude: set[int]) -> Optional[object]:
+        rt = self.rt
+        storages = rt.storages
+        members = self.members
+        keys = self._keys
+        slot = self._slot
+        clock = rt.clock
+        heappop, heappush = heapq.heappop, heapq.heappush
+
+        best = None
+        best_score = 0.0
+        best_sid = -1
+        thresh = float("inf")     # best_score * (1 + eps), cached
+        stash: list[tuple[list, tuple[float, int]]] = []
+        bands = self._bands
+        band_of = self._band_of
+
+        def valid_top(b: int, heap: list):
+            """Validated (la, sid) top of band ``b``; discards stale entries."""
+            while heap:
+                la, sid = heap[0]
+                if sid in members:
+                    k = keys.get(sid)
+                    if (k is not None and band_of(k) == b
+                            and la == storages[sid].last_access):
+                        return la, sid, k
+                heappop(heap)
+                if slot.get(sid) == (b, la):
+                    del slot[sid]            # re-add must place afresh
+            return None
+
+        # Probe every band's current lower bound (floor key over its oldest
+        # member's staleness) and process most-promising first, so the
+        # first walked band sets a near-optimal threshold and the rest are
+        # usually skipped whole by their already-known bound.
+        order: list[tuple[float, int]] = []
+        for b in self._band_ids:
+            heap = bands[b]
+            if not heap:
+                continue
+            top = valid_top(b, heap)
+            if top is None:
+                continue
+            st = clock - top[0]
+            if st < _MIN_STALENESS:
+                st = _MIN_STALENESS
+            order.append((self._floor_of(b) / st, b))
+        order.sort()
+
+        for initial_bound, b in order:
+            if initial_bound > thresh:
+                break                        # later bands only start worse
+            heap = bands[b]
+            k_floor = self._floor_of(b)
+            while heap:
+                top = valid_top(b, heap)
+                if top is None:
+                    break
+                la, sid, k = top
+                st = clock - la              # oldest remaining in band
+                if st < _MIN_STALENESS:
+                    st = _MIN_STALENESS
+                if k_floor / st > thresh:
+                    break                    # rest of band is fresher still
+                stash.append((heap, heappop(heap)))
+                if sid in exclude or k / st > thresh:
+                    continue                 # unselectable / provably worse
+                self.pops += 1
+                s = storages[sid]
+                sc = self.cached_score(s)
+                if (best is None or sc < best_score
+                        or (sc == best_score and sid < best_sid)):
+                    best, best_score, best_sid = s, sc, sid
+                    thresh = best_score * (1.0 + _BOUND_EPS) + 1e-300
+        for heap, entry in stash:
+            heappush(heap, entry)
+        return best
+
+    def _pick_keyed(self, exclude: set[int]) -> Optional[object]:
+        rt = self.rt
+        storages = rt.storages
+        members = self.members
+        ver = self._ver
+        kheap = self._kheap
+        heappop, heappush = heapq.heappop, heapq.heappush
+
+        best = None
+        best_score = 0.0
+        best_sid = -1
+        popped: list[tuple[float, int, int]] = []
+
+        while kheap:
+            k, sid, v = kheap[0]
+            if v != ver.get(sid):
+                heappop(kheap)               # superseded by a newer push
+                continue
+            if sid not in members:
+                # Dormant (locked/evicted) storage: consuming its only live
+                # entry, so drop the key — membership re-add re-pushes.
+                heappop(kheap)
+                self._keys.pop(sid, None)
+                continue
+            # For staleness-free heuristics ``key`` is the same expression
+            # as ``score`` (bit-identical), and equal keys pop in ascending
+            # sid order — so a larger-or-equal key can neither beat the
+            # best nor win its sid tie-break.
+            if best is not None and k >= best_score:
+                break
+            popped.append(heappop(kheap))
+            if sid in exclude:
+                continue
+            self.pops += 1
+            s = storages[sid]
+            sc = self.cached_score(s)
+            if (best is None or sc < best_score
+                    or (sc == best_score and sid < best_sid)):
+                best, best_score, best_sid = s, sc, sid
+        for entry in popped:
+            heappush(kheap, entry)
+        return best

@@ -13,12 +13,20 @@ The engine is *simulated-time*: the clock advances by operator cost on each
 staying deterministic (Appendix E.3 recommends exactly this).  It is also the
 execution engine for the *eager* executor (``repro.eager``), which attaches
 real JAX buffers to storages via the ``materialize_fn`` / ``free_fn`` hooks.
+
+Victim selection runs through the incremental eviction index by default
+(``index=True``; see ``repro.core.evict_index``): a live evictable set plus
+verified lazy heaps deliver the same victim as the exhaustive linear scan —
+bit-exactly, tie-breaks included — in sublinear time, and cached
+``e*``/``ẽ*`` neighborhood costs are invalidated per evicted component
+instead of globally.  ``index=False`` selects the linear-scan oracle.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
+from .evict_index import EvictIndex, ScopedInvalidator
 from .unionfind import CostUnionFind
 
 
@@ -58,6 +66,12 @@ class TensorRec:
     refs: int = 1                   # external references
 
 
+# Storage fields whose writes can change candidate membership or a heap
+# key/staleness bound; writes to them notify the attached eviction index.
+_WATCHED = frozenset(("resident", "locks", "pinned", "banished", "constant",
+                      "last_access", "local_cost"))
+
+
 @dataclass
 class StorageRec:
     sid: int
@@ -75,6 +89,18 @@ class StorageRec:
     children: set[int] = field(default_factory=set)   # dependent storages
     uf: int = -1                    # union-find handle (h_eq heuristics)
     refs: int = 0                   # cached sum of view refs
+
+    # Eviction-index backref (class attr so dataclass __init__ writes are
+    # silent; EvictIndex.register() sets it per instance).
+    _index = None
+
+    def __setattr__(self, name, value):
+        if (name in _WATCHED and self._index is not None
+                and getattr(self, name, None) != value):
+            object.__setattr__(self, name, value)
+            self._index.on_storage_event(self, name)
+        else:
+            object.__setattr__(self, name, value)
 
     def evictable(self) -> bool:
         return (self.resident and not self.pinned and not self.banished
@@ -96,6 +122,7 @@ class DTRRuntime:
         free_fn: Optional[Callable] = None,
         compute_limit: float = float("inf"),
         allocator=None,                     # repro.alloc.PoolAllocator | None
+        index: bool = True,                 # incremental eviction index
     ) -> None:
         assert dealloc in ("ignore", "eager", "banish")
         self.budget = float(budget)
@@ -126,12 +153,26 @@ class DTRRuntime:
         self.evictions = 0
         self.meta_accesses = 0          # Appendix D.3 accounting
         self._pending_banish: set[int] = set()
-        self._version = 0               # bumped on evict/remat: e* cache key
-        self._estar_cache: dict[int, tuple[int, float, int]] = {}
+        # Scoped caches for neighborhood costs: entries are dropped by the
+        # ScopedInvalidator when (and only when) their evicted component
+        # changes — no global version nuke (App. C.5 overhead fix).
+        self._estar_cache: dict[int, tuple[float, int]] = {}  # sid->(cost, n)
+        self._eq_cache: dict[int, float] = {}
 
         self.uf = CostUnionFind() if getattr(heuristic, "needs_uf", False) else None
         if hasattr(heuristic, "bind"):
             heuristic.bind(self)
+
+        # Incremental victim-selection index.  The linear scan stays as the
+        # reference oracle (index=False) and as the automatic fallback for
+        # non-separable heuristics (h_rand consumes RNG state per score) and
+        # the E.2 sampling approximations, whose sampled candidate pools the
+        # heap cannot reproduce bit-exactly.
+        self.index: Optional[EvictIndex] = None
+        self._invalidator = ScopedInvalidator(self)
+        if (index and getattr(heuristic, "separable", False)
+                and not sample_sqrt and ignore_small_frac == 0):
+            self.index = EvictIndex(self)
 
         # Optional fragmentation-aware backend: storages map onto contiguous
         # blocks of a simulated address space, and eviction under pressure
@@ -154,6 +195,8 @@ class DTRRuntime:
             s.uf = self.uf.make(0.0)
         self.tensors[tid] = t
         self.storages[sid] = s
+        if self.index is not None:
+            self.index.register(s)
         self._alloc_storages([s])
         return tid
 
@@ -177,6 +220,7 @@ class DTRRuntime:
 
         # Create output tensor/storage records (not yet resident).
         out_tids: list[int] = []
+        new_storages: list[StorageRec] = []
         for size, al, nm in zip(out_sizes, aliases, out_names):
             tid = self._next_tid
             self._next_tid += 1
@@ -187,6 +231,10 @@ class DTRRuntime:
                 s.tensor_tids.append(tid)
                 s.local_cost += op.cost
                 s.refs += 1
+                if not s.resident and not s.banished:
+                    # Cached closures summing this evicted storage hold the
+                    # pre-view cost: drop them (scoped to its component).
+                    self._invalidator.on_cost_change(s)
             else:
                 sid = self._next_sid
                 self._next_sid += 1
@@ -197,6 +245,7 @@ class DTRRuntime:
                 if self.uf is not None:
                     s.uf = self.uf.make(0.0)
                 self.storages[sid] = s
+                new_storages.append(s)
             self.tensors[tid] = t
             out_tids.append(tid)
         op.output_tids = tuple(out_tids)
@@ -209,6 +258,14 @@ class DTRRuntime:
                 if isid != osid:
                     self.storages[osid].deps.add(isid)
                     self.storages[isid].children.add(osid)
+
+        # New storages are evicted-like until first materialization:
+        # neighborhood closures can already reach them, so join them to the
+        # evicted components and invalidate adjacent cached costs.
+        for s in new_storages:
+            if self.index is not None:
+                self.index.register(s)
+            self._invalidator.on_evict(s)
 
         # Inputs must be materialized, then perform.  Lock inputs across the
         # whole sequence so rematerializing input B cannot evict input A.
@@ -369,6 +426,9 @@ class DTRRuntime:
                                  exclude={s.sid for s in out_storages})
             for s in out_storages:
                 s.resident = True
+                # The storage leaves the evicted set (first materialization
+                # included): closures that summed it are stale.
+                self._invalidator.on_unevict(s)
                 if not first:
                     self._on_remat(s)
             # Define output views computed by this op (aliases included).
@@ -471,6 +531,10 @@ class DTRRuntime:
         return pool
 
     def _pick_victim(self, exclude: set[int]) -> Optional[StorageRec]:
+        if self.index is not None:
+            return self.index.pick(exclude)
+        # Reference oracle: exhaustive linear scan (kept bit-exact; the
+        # index's verified heap must select the same victim).
         pool = self._candidates(exclude)
         best, best_score = None, None
         for s in pool:
@@ -487,7 +551,9 @@ class DTRRuntime:
             self.tensors[tid].defined = False
         self.memory -= s.size
         self.evictions += 1
-        self._version += 1
+        # Scoped invalidation: drop cached neighborhood costs only in the
+        # components this eviction merges / the storages adjacent to it.
+        self._invalidator.on_evict(s)
         if self.allocator is not None:
             self.allocator.free(s)
         if self.free_fn is not None:
@@ -502,7 +568,8 @@ class DTRRuntime:
                     self.meta_accesses += 1
 
     def _on_remat(self, s: StorageRec) -> None:
-        self._version += 1
+        # (ScopedInvalidator.on_unevict already ran in _perform, before the
+        # union-find split below mutates the component cost sums.)
         if self.uf is not None:
             s.uf = self.uf.split_approx(s.uf, s.local_cost)
             self.meta_accesses += 1
@@ -526,7 +593,10 @@ class DTRRuntime:
                 self.free_fn(s)
         s.resident = False
         s.banished = True
-        self._version += 1
+        # Banished storages leave the evicted closures permanently; drop the
+        # cached costs of their component's consumers (no-op if s was
+        # resident: nothing cached ever summed it).
+        self._invalidator.on_unevict(s)
         # Children become non-rematerializable => pin them.
         for csid in s.children:
             c = self.storages[csid]
@@ -540,10 +610,17 @@ class DTRRuntime:
         return max(self.clock - s.last_access, 1e-9)
 
     def evicted_neighborhood_cost(self, s: StorageRec) -> float:
-        """Exact  Σ_{T ∈ e*(S)} cost(T)  with per-round caching (App. C.5)."""
+        """Exact  Σ_{T ∈ e*(S)} cost(T)  with scoped caching (App. C.5).
+
+        Cache entries live until the ScopedInvalidator drops them: while
+        computing, the walk subscribes ``s`` to the evicted component of
+        every storage it sums, so an evict/remat elsewhere leaves this
+        entry intact.
+        """
         hit = self._estar_cache.get(s.sid)
-        if hit is not None and hit[0] == self._version:
-            return hit[1]
+        if hit is not None:
+            return hit[0]
+        subscribe = self._invalidator.subscribe
         total = 0.0
         seen: set[int] = set()
         # Evicted ancestors: closure over evicted deps.
@@ -556,6 +633,7 @@ class DTRRuntime:
             self.meta_accesses += 1
             xs = self.storages[x]
             total += xs.local_cost
+            subscribe(x, s.sid)
             stack.extend(d for d in xs.deps if self._is_evicted(d) and d not in seen)
         # Evicted descendants: closure over evicted children.
         stack = [c for c in s.children if self._is_evicted(c)]
@@ -567,13 +645,20 @@ class DTRRuntime:
             self.meta_accesses += 1
             xs = self.storages[x]
             total += xs.local_cost
+            subscribe(x, s.sid)
             stack.extend(c for c in xs.children
                          if self._is_evicted(c) and c not in seen)
-        self._estar_cache[s.sid] = (self._version, total, len(seen))
+        self._estar_cache[s.sid] = (total, len(seen))
         return total
 
     def evicted_ancestor_cost(self, s: StorageRec) -> float:
-        """Σ cost over evicted ancestors only (MSPS, Peng et al. 2020)."""
+        """Σ cost over evicted ancestors only (MSPS, Peng et al. 2020).
+
+        Uncached (matching the original accounting), but the walk still
+        subscribes so the eviction index knows when a cached *score* built
+        on this value goes stale.
+        """
+        subscribe = self._invalidator.subscribe
         total = 0.0
         seen: set[int] = set()
         stack = [d for d in s.deps if self._is_evicted(d)]
@@ -585,12 +670,23 @@ class DTRRuntime:
             self.meta_accesses += 1
             xs = self.storages[x]
             total += xs.local_cost
+            subscribe(x, s.sid)
             stack.extend(d for d in xs.deps if self._is_evicted(d) and d not in seen)
         return total
 
     def eq_neighborhood_cost(self, s: StorageRec) -> float:
-        """ẽ*(S) via union-find components of evicted neighbors (App. C.2)."""
+        """ẽ*(S) via union-find components of evicted neighbors (App. C.2).
+
+        Scoped caching mirrors ``evicted_neighborhood_cost``: the value only
+        depends on the component roots and cost sums of evicted neighbors,
+        both of which mutate exactly on evict (union + add_cost) and remat
+        (split) events — which pop the subscriptions registered here.
+        """
         assert self.uf is not None
+        hit = self._eq_cache.get(s.sid)
+        if hit is not None:
+            return hit
+        subscribe = self._invalidator.subscribe
         roots: set[int] = set()
         total = 0.0
         for nsid in s.deps | s.children:
@@ -598,10 +694,12 @@ class DTRRuntime:
             if not ns.resident and not ns.banished:
                 r = self.uf.find(ns.uf)
                 self.meta_accesses += 1
+                subscribe(nsid, s.sid)
                 if r not in roots:
                     roots.add(r)
                     total += self.uf._cost[r]
         self.meta_accesses += len(roots)
+        self._eq_cache[s.sid] = total
         return total
 
     def _is_evicted(self, sid: int) -> bool:

@@ -10,9 +10,16 @@ paper's fungible byte counter; ``"pool"`` maps storages onto a simulated
 address space requiring contiguous fits with window eviction
 (``repro.alloc``); ``"pool_nofrag"`` keeps counter semantics bit-for-bit but
 tracks block placement for fragmentation telemetry.
+
+``index`` toggles the incremental eviction index
+(``repro.core.evict_index``); ``index=False`` runs the linear-scan oracle.
+Both produce identical eviction decisions (only ``meta_accesses`` may
+differ); large sweeps additionally parallelize across processes with
+``sweep_parallel``.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass, field
 
 from .graph import Log, replay
@@ -97,13 +104,15 @@ def simulate(
     thrash_factor: float = 50.0,
     alloc_mode: str | None = None,
     placement: str = "best_fit",
+    index: bool = True,
 ) -> RunResult:
     h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
     rt = DTRRuntime(budget=budget, heuristic=h, dealloc=dealloc,
                     ignore_small_frac=ignore_small_frac,
                     sample_sqrt=sample_sqrt, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
-                    allocator=make_allocator(alloc_mode, placement))
+                    allocator=make_allocator(alloc_mode, placement),
+                    index=index)
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
@@ -133,6 +142,7 @@ def sweep(
     seed: int = 0,
     alloc_mode: str | None = None,
     placement: str = "best_fit",
+    index: bool = True,
 ) -> SweepResult:
     peak, _ = measure_baseline(log)
     out = SweepResult(log_name=log.name, heuristic=heuristic,
@@ -142,6 +152,90 @@ def sweep(
         out.runs.append(
             simulate(log, by_name(heuristic, seed), budget=f * peak,
                      dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
-                     placement=placement))
+                     placement=placement, index=index))
         out.runs[-1].budget = f  # report as fraction
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Process-parallel sweep driver
+# ---------------------------------------------------------------------------
+
+def _simulate_task(payload: tuple) -> RunResult:
+    """Worker: one (log, heuristic, fraction) cell.  Logs travel as their
+    JSON-lines serialization so the payload pickles cheaply and
+    deterministically on every start method."""
+    (text, name, heuristic, budget, frac, dealloc, seed, alloc_mode,
+     placement, index) = payload
+    log = Log.loads(text, name=name)
+    r = simulate(log, by_name(heuristic, seed), budget=budget,
+                 dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
+                 placement=placement, index=index)
+    r.budget = frac  # report as fraction
+    return r
+
+
+def sweep_parallel(
+    logs: list[Log] | Log,
+    heuristics: list[str] | str,
+    fractions: list[float],
+    dealloc: str = "eager",
+    seed: int = 0,
+    alloc_mode: str | None = None,
+    placement: str = "best_fit",
+    index: bool = True,
+    processes: int | None = None,
+) -> list[SweepResult]:
+    """Sweep the budgets × heuristics × models grid across processes.
+
+    Every grid cell is an independent ``simulate`` call, so the grid is
+    embarrassingly parallel; cells are dispatched to a process pool and
+    regrouped into one ``SweepResult`` per (model, heuristic) pair, in grid
+    order — results are identical to nested serial ``sweep`` calls.
+    ``processes=0`` (or a single-cell grid) forces the serial path; any
+    pool bring-up failure (restricted environments) falls back to serial.
+    """
+    logs = [logs] if isinstance(logs, Log) else list(logs)
+    heuristics = ([heuristics] if isinstance(heuristics, str)
+                  else list(heuristics))
+    # Keyed positionally, not by log.name: duplicate names must not collide.
+    baselines = [measure_baseline(log)[0] for log in logs]
+    texts = [log.dumps() for log in logs]
+    grid = [(i, h) for i in range(len(logs)) for h in heuristics]
+    payloads = [
+        (texts[i], logs[i].name, h, f * baselines[i], f,
+         dealloc, seed, alloc_mode, placement, index)
+        for i, h in grid for f in fractions]
+
+    runs: list[RunResult] | None = None
+    if processes != 0 and len(payloads) > 1:
+        try:
+            from concurrent.futures import ProcessPoolExecutor
+            from concurrent.futures.process import BrokenProcessPool
+        except ImportError:
+            pass
+        else:
+            try:
+                workers = processes or min(len(payloads),
+                                           os.cpu_count() or 1)
+                with ProcessPoolExecutor(max_workers=workers) as pool:
+                    runs = list(pool.map(_simulate_task, payloads,
+                                         chunksize=1))
+            except (OSError, PermissionError, BrokenProcessPool):
+                # Pool bring-up failure or a killed worker (e.g. OOM): redo
+                # the whole grid serially — cells are deterministic, so
+                # results match an undisturbed parallel run.
+                runs = None
+    if runs is None:
+        runs = [_simulate_task(p) for p in payloads]
+
+    out: list[SweepResult] = []
+    it = iter(runs)
+    for i, h in grid:
+        sw = SweepResult(log_name=logs[i].name, heuristic=h,
+                         baseline_peak=baselines[i],
+                         alloc_mode=alloc_mode or "counter")
+        for _ in fractions:
+            sw.runs.append(next(it))
+        out.append(sw)
     return out
