@@ -117,6 +117,35 @@ def perf_runtime():
     return _timed("perf_runtime", lambda: [m.run(smoke=True)], derive)
 
 
+def serving():
+    """Captured serving/train traces -> budget curves (BENCH_serving.json)."""
+    import json
+
+    def fn():
+        from repro.trace.__main__ import main as trace_main
+        code = trace_main([
+            "report", "--smoke", "--heuristics", "h_dtr_eq", "h_lru",
+            "--fractions", "0.9", "0.7", "0.5", "0.3",
+            "--thrash-factor", "10", "--out", "BENCH_serving.json"])
+        with open("BENCH_serving.json") as f:
+            rep = json.load(f)
+        rep["exit"] = code
+        return [rep]
+
+    def derive(rows):
+        rep = rows[0]
+        if rep["equivalence_failures"]:
+            return f"EQUIVALENCE FAILURES={rep['equivalence_failures']}"
+        serve = [c["min_feasible_fraction"] for c in rep["curves"]
+                 if c["trace"].startswith("serve")
+                 and c["heuristic"] == "h_dtr_eq"]
+        return (f"traces={len(rep['traces'])} oracle-equivalent; "
+                f"serve min_budget(h_dtr_eq)="
+                f"{[round(x, 2) if x else None for x in serve]}")
+
+    return _timed("serving", fn, derive)
+
+
 def roofline():
     from . import roofline as m
 
@@ -139,6 +168,7 @@ def main() -> None:
     table1_maxinput()
     fig_fragmentation()
     perf_runtime()
+    serving()
     roofline()
 
 

@@ -1,0 +1,129 @@
+"""CLI driver for the process-parallel budget sweep (ROADMAP: "parallel
+sweep ergonomics").
+
+Sweeps budgets × heuristics × models through ``simulator.sweep_parallel``
+and writes one JSON report.  Models are synthetic graph builders by name
+(``core.graphs``) and/or captured trace files (``repro.trace``); traces are
+swept over the activation budget range by default (their pinned weights
+would otherwise put every interesting fraction below the feasibility floor).
+
+  PYTHONPATH=src python -m benchmarks.sweep --smoke
+  PYTHONPATH=src python -m benchmarks.sweep \
+      --models mlp resnet transformer --heuristics h_dtr h_dtr_eq h_lru \
+      --fractions 0.9 0.7 0.5 0.4 0.3 --out sweep.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+import time
+
+from repro.core import graphs
+from repro.core.graph import Log
+from repro.core.heuristics import ALL_NAMES
+from repro.core.simulator import sweep_parallel
+
+BUILDERS = {
+    "mlp": lambda: graphs.mlp(),
+    "resnet": lambda: graphs.resnet(),
+    "unet": lambda: graphs.unet(),
+    "transformer": lambda: graphs.transformer(),
+    "lstm": lambda: graphs.lstm(),
+    "treelstm": lambda: graphs.treelstm(),
+    "random_dag": lambda: graphs.random_dag(200, seed=0),
+    "linear200": lambda: graphs.linear_network(200),
+}
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m benchmarks.sweep")
+    ap.add_argument("--models", nargs="+", default=["mlp", "transformer"],
+                    choices=sorted(BUILDERS))
+    ap.add_argument("--traces", nargs="*", default=[],
+                    help="captured trace files to sweep as well")
+    ap.add_argument("--heuristics", nargs="+", default=["h_dtr_eq", "h_lru"],
+                    choices=ALL_NAMES + ["h_estar"])
+    ap.add_argument("--fractions", nargs="+", type=float,
+                    default=[0.9, 0.7, 0.5, 0.4, 0.3])
+    ap.add_argument("--dealloc", default="eager",
+                    choices=["ignore", "eager", "banish"])
+    ap.add_argument("--alloc-mode", default=None,
+                    choices=[None, "counter", "pool", "pool_nofrag"])
+    ap.add_argument("--budget-mode", default=None,
+                    choices=["peak", "activation"],
+                    help="default: peak for synthetic models, activation "
+                         "for captured traces")
+    ap.add_argument("--scan", action="store_true",
+                    help="linear-scan oracle instead of the eviction index")
+    ap.add_argument("--processes", type=int, default=None,
+                    help="0 forces the serial path")
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced CI grid (2 models x 2 heuristics x 3 "
+                         "budgets, serial-equivalence asserted)")
+    ap.add_argument("--out", default="sweep.json")
+    args = ap.parse_args(argv)
+
+    if args.smoke:
+        args.models = ["mlp", "treelstm"]
+        args.heuristics = ["h_dtr_eq", "h_lru"]
+        args.fractions = [0.9, 0.6, 0.4]
+
+    model_logs = [BUILDERS[m]() for m in args.models]
+    trace_logs = []
+    for path in args.traces:
+        with open(path) as f:
+            trace_logs.append(Log.loads(f.read()))
+
+    t0 = time.perf_counter()
+    results = []
+    for logs, default_mode in ((model_logs, "peak"),
+                               (trace_logs, "activation")):
+        if not logs:
+            continue
+        results += sweep_parallel(
+            logs, args.heuristics, args.fractions, dealloc=args.dealloc,
+            alloc_mode=args.alloc_mode, index=not args.scan,
+            processes=args.processes,
+            budget_mode=args.budget_mode or default_mode)
+    wall = time.perf_counter() - t0
+
+    if args.smoke:
+        # CI gate: the parallel grid must equal a serial re-run cell by cell.
+        serial = []
+        for logs, default_mode in ((model_logs, "peak"),
+                                   (trace_logs, "activation")):
+            if not logs:
+                continue
+            serial += sweep_parallel(
+                logs, args.heuristics, args.fractions, dealloc=args.dealloc,
+                alloc_mode=args.alloc_mode, index=not args.scan, processes=0,
+                budget_mode=args.budget_mode or default_mode)
+        if [s.runs for s in serial] != [r.runs for r in results]:
+            print("SMOKE FAILURE: parallel sweep != serial sweep")
+            return 1
+        print("smoke: parallel == serial over "
+              f"{sum(len(r.runs) for r in results)} cells")
+
+    report = {"wall_s": round(wall, 3), "grid": []}
+    print(f"model,heuristic,fraction,ok,slowdown,evictions,remats")
+    for sw in results:
+        entry = {"model": sw.log_name, "heuristic": sw.heuristic,
+                 "baseline_peak": sw.baseline_peak,
+                 "alloc_mode": sw.alloc_mode,
+                 "min_feasible": min((r.budget for r in sw.runs if r.ok),
+                                     default=None),
+                 "runs": [vars(r) for r in sw.runs]}
+        report["grid"].append(entry)
+        for r in sw.runs:
+            slow = f"{r.slowdown:.3f}" if r.ok else "inf"
+            print(f"{sw.log_name},{sw.heuristic},{r.budget},{int(r.ok)},"
+                  f"{slow},{r.evictions},{r.remat_ops}")
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+    print(f"-> {args.out} ({len(report['grid'])} rows, {wall:.2f}s)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

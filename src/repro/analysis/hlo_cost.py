@@ -141,11 +141,16 @@ def parse_module(text: str) -> tuple[dict[str, Computation], str]:
             cd = _CDIMS_RE.search(rest)
             contracted = 1
             if cd:
-                # first operand name:
+                # lhs shape: CPU/GPU HLO inlines operand types in the call
+                # ("dot(f32[64,128]{1,0} %a, ...)"), TPU HLO references by
+                # name only ("dot(%a, ...)") — try inline first, then the
+                # symbol table.
                 ops = rest.split(")")[0]
-                first = ops.split(",")[0].strip().lstrip("%")
-                lhs_type = symbols.get(first, "")
-                shapes = _SHAPE_RE.findall(lhs_type)
+                shapes = _SHAPE_RE.findall(ops)
+                if not shapes:
+                    first = re.search(r"%?([\w\.\-]+)", ops)
+                    lhs_type = symbols.get(first.group(1), "") if first else ""
+                    shapes = _SHAPE_RE.findall(lhs_type)
                 if shapes:
                     dims = [int(x) for x in shapes[0][1].split(",") if x]
                     for di in cd.group(1).split(","):

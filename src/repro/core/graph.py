@@ -13,14 +13,35 @@ instrumented PyTorch emits:
   RELEASE(t)                       — external refcount decrement
 
 Logs can be built programmatically (``LogBuilder``), synthesized from model
-shapes (``graphs.py``), extracted from jaxprs (``planner.py``), or serialized
-to/from JSON lines.  ``replay`` drives a DTR runtime from a log.
+shapes (``graphs.py``), extracted from jaxprs (``planner.py``), captured from
+real serve/train workloads (``repro.trace``), or serialized to/from JSON
+lines.  ``replay`` drives a DTR runtime from a log.
+
+Serialization is versioned: ``dumps`` emits a ``LogHeader`` line carrying the
+schema version, the log name, and log-level metadata (capture source, model
+config, slot width, ...); ``loads`` accepts headerless version-1 streams for
+backward compatibility.  Every instruction optionally carries ``meta`` — a
+tuple of ``(key, value)`` pairs (hashable, JSON-round-trippable) used by the
+trace subsystem to tag per-request/slot/phase boundaries in captured serving
+traces.  Metadata never influences replay decisions.
 """
 from __future__ import annotations
 
 import json
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
+
+SCHEMA_VERSION = 2
+
+MetaT = tuple  # tuple[(str, str | int | float), ...]
+
+
+def as_meta(m) -> MetaT:
+    """Normalize a dict/iterable of pairs into the canonical meta tuple."""
+    if not m:
+        return ()
+    items = m.items() if isinstance(m, dict) else m
+    return tuple((str(k), v) for k, v in items)
 
 
 # ---------------------------------------------------------------------------
@@ -30,18 +51,21 @@ from typing import Iterable, Sequence
 @dataclass(frozen=True)
 class Constant:
     t: str
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
 class Memory:
     t: str
     size: int
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
 class Alias:
     t_out: str
     t_in: str | None  # None => t_out's parent op created its storage
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
@@ -50,6 +74,7 @@ class Call:
     outputs: tuple[str, ...]
     cost: float
     op: str
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
@@ -58,23 +83,27 @@ class Mutate:
     mutated: tuple[str, ...]  # subset of inputs
     cost: float
     op: str
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
 class Copy:
     t_out: str
     t_in: str
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
 class CopyFrom:
     t_out: str
     t_in: str
+    meta: MetaT = ()
 
 
 @dataclass(frozen=True)
 class Release:
     t: str
+    meta: MetaT = ()
 
 
 Instr = Constant | Memory | Alias | Call | Mutate | Copy | CopyFrom | Release
@@ -88,6 +117,8 @@ Instr = Constant | Memory | Alias | Call | Mutate | Copy | CopyFrom | Release
 class Log:
     instrs: list[Instr] = field(default_factory=list)
     name: str = "log"
+    version: int = SCHEMA_VERSION
+    meta: dict = field(default_factory=dict)   # log-level capture metadata
 
     def __iter__(self):
         return iter(self.instrs)
@@ -97,29 +128,72 @@ class Log:
 
     # -- serialization ------------------------------------------------------
     def dumps(self) -> str:
-        out = []
+        header = {"kind": "LogHeader", "version": SCHEMA_VERSION,
+                  "name": self.name}
+        if self.meta:
+            header["meta"] = self.meta
+        out = [json.dumps(header)]
         for ins in self.instrs:
             d = {"kind": type(ins).__name__}
-            d.update({k: getattr(ins, k) for k in ins.__dataclass_fields__})
+            for k in ins.__dataclass_fields__:
+                v = getattr(ins, k)
+                if k == "meta":
+                    if v:
+                        d[k] = [list(p) for p in v]
+                    continue
+                d[k] = v
             out.append(json.dumps(d))
         return "\n".join(out)
 
     @staticmethod
-    def loads(text: str, name: str = "log") -> "Log":
+    def loads(text: str, name: str | None = None) -> "Log":
         kinds = {c.__name__: c for c in
-                 (Constant, Memory, Alias, Call, Mutate, Copy, CopyFrom, Release)}
+                 (Constant, Memory, Alias, Call, Mutate, Copy, CopyFrom,
+                  Release)}
         instrs: list[Instr] = []
-        for line in text.splitlines():
+        version = 1
+        log_name = name
+        log_meta: dict = {}
+        for lineno, line in enumerate(text.splitlines(), start=1):
             line = line.strip()
             if not line:
                 continue
-            d = json.loads(line)
-            cls = kinds[d.pop("kind")]
+            try:
+                d = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"malformed log line {lineno}: {e}") from e
+            if not isinstance(d, dict) or "kind" not in d:
+                raise ValueError(
+                    f"malformed log line {lineno}: not an instruction object")
+            kind = d.pop("kind")
+            if kind == "LogHeader":
+                version = int(d.get("version", 1))
+                if version > SCHEMA_VERSION:
+                    raise ValueError(
+                        f"log schema version {version} is newer than "
+                        f"supported ({SCHEMA_VERSION})")
+                if log_name is None and "name" in d:
+                    log_name = d["name"]
+                log_meta = d.get("meta", {}) or {}
+                continue
+            cls = kinds.get(kind)
+            if cls is None:
+                raise ValueError(
+                    f"malformed log line {lineno}: unknown instruction "
+                    f"kind {kind!r}")
             for k in ("inputs", "outputs", "mutated"):
                 if k in d:
                     d[k] = tuple(d[k])
-            instrs.append(cls(**d))
-        return Log(instrs, name=name)
+            if "meta" in d:
+                d["meta"] = as_meta(d["meta"])
+            try:
+                instrs.append(cls(**d))
+            except TypeError as e:
+                raise ValueError(
+                    f"malformed log line {lineno}: bad fields for "
+                    f"{kind}: {e}") from e
+        return Log(instrs, name=log_name or "log", version=version,
+                   meta=log_meta)
 
     # -- analysis helpers ---------------------------------------------------
     def baseline_cost(self) -> float:
@@ -128,6 +202,22 @@ class Log:
 
     def op_count(self) -> int:
         return sum(1 for i in self.instrs if isinstance(i, (Call, Mutate)))
+
+    def pinned_bytes(self) -> int:
+        """Total bytes of CONSTANT storages — the unevictable floor.
+
+        Constant storages are pinned, so even a RELEASE never frees them
+        under the ``ignore``/``eager`` policies — once created they occupy
+        memory to the end of the run (``banish`` can free them; activation-
+        mode budgets are an approximation there).  Serving sweeps express
+        budgets as ``pinned + fraction * (peak - pinned)`` to scan the
+        meaningful (activation/KV) range.
+        """
+        total = 0
+        for a, b in zip(self.instrs, self.instrs[1:]):
+            if isinstance(a, Constant) and isinstance(b, Memory):
+                total += b.size
+        return total
 
 
 class LogBuilder:
@@ -147,9 +237,10 @@ class LogBuilder:
         self._fresh += 1
         return f"{prefix}{self._fresh}"
 
-    def constant(self, size: int, name: str | None = None) -> str:
+    def constant(self, size: int, name: str | None = None,
+                 meta=None) -> str:
         t = name or self.fresh("const")
-        self.log.instrs.append(Constant(t))
+        self.log.instrs.append(Constant(t, meta=as_meta(meta)))
         self.log.instrs.append(Memory(t, int(size)))
         return t
 
@@ -161,9 +252,11 @@ class LogBuilder:
         op: str,
         aliases: Sequence[str | None] | None = None,
         out_names: Sequence[str] | None = None,
+        meta=None,
     ) -> list[str]:
         outs = list(out_names) if out_names else [self.fresh() for _ in out_sizes]
-        self.log.instrs.append(Call(tuple(inputs), tuple(outs), float(cost), op))
+        self.log.instrs.append(Call(tuple(inputs), tuple(outs), float(cost),
+                                    op, meta=as_meta(meta)))
         aliases = aliases or [None] * len(outs)
         for t, size, al in zip(outs, out_sizes, aliases):
             self.log.instrs.append(Memory(t, 0 if al is not None else int(size)))
@@ -171,12 +264,13 @@ class LogBuilder:
         return outs
 
     def mutate(self, inputs: Sequence[str], mutated: Sequence[str],
-               cost: float, op: str) -> None:
+               cost: float, op: str, meta=None) -> None:
         self.log.instrs.append(
-            Mutate(tuple(inputs), tuple(mutated), float(cost), op))
+            Mutate(tuple(inputs), tuple(mutated), float(cost), op,
+                   meta=as_meta(meta)))
 
-    def release(self, t: str) -> None:
-        self.log.instrs.append(Release(t))
+    def release(self, t: str, meta=None) -> None:
+        self.log.instrs.append(Release(t, meta=as_meta(meta)))
 
     def auto_release(self, keep: Iterable[str] = ()) -> Log:
         """Append RELEASE after last use for every tensor not in ``keep``.

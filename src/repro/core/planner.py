@@ -108,6 +108,18 @@ class TracedGraph:
     total_flops: float = 0.0
 
 
+def _eqn_cost(eqn, scale) -> float:
+    """Cost contribution of one flattened (eqn, scale) pair.
+
+    Opaque sub-jaxprs (nested pjit / scan inside a scanned body) carry their
+    pre-summed total in the scale tuple; multiplying eqn_flops by it would be
+    meaningless (and breaks on the tuple).
+    """
+    if isinstance(scale, tuple):
+        return float(scale[1])
+    return eqn_flops(eqn) * scale
+
+
 def _flatten_eqns(jaxpr, depth: int = 0):
     """Yield (eqn, scale) with nested jaxprs inlined; scan bodies scaled."""
     for eqn in jaxpr.eqns:
@@ -124,7 +136,7 @@ def _flatten_eqns(jaxpr, depth: int = 0):
                 ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
                 # Treat as opaque op (cost summed) to keep the DAG aligned
                 # with data deps at this level.
-                total = sum(eqn_flops(e) * s
+                total = sum(_eqn_cost(e, s)
                             for e, s in _flatten_eqns(ij, depth + 1))
                 yield eqn, ("opaque", total)
                 continue
@@ -132,7 +144,7 @@ def _flatten_eqns(jaxpr, depth: int = 0):
             length = eqn.params.get("length", 1)
             inner = eqn.params["jaxpr"]
             ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
-            total = sum(eqn_flops(e) * s
+            total = sum(_eqn_cost(e, s)
                         for e, s in _flatten_eqns(ij, depth + 1)) * length
             yield eqn, ("opaque", total)
             continue
@@ -144,22 +156,159 @@ def _flatten_eqns(jaxpr, depth: int = 0):
 
 
 def trace_to_log(fn: Callable, *example_args, name: str = "traced",
+                 unroll_scans: bool = False, unroll_limit: int = 256,
                  **example_kwargs) -> TracedGraph:
-    """Trace ``fn`` and convert its jaxpr into a DTR operator log."""
+    """Trace ``fn`` and convert its jaxpr into a DTR operator log.
+
+    ``unroll_scans=True`` inlines ``lax.scan`` bodies per iteration (up to
+    ``unroll_limit`` trips) instead of treating the scan as one opaque op.
+    Scanned layer stacks then appear as per-layer operator chains — without
+    this, the whole stack is a single op whose inputs/outputs lock nearly the
+    entire peak and DTR has nothing to evict (the ``repro.trace`` captures of
+    real train steps need the unrolled form).
+    """
     closed = jax.make_jaxpr(fn)(*example_args, **example_kwargs)
     jaxpr = closed.jaxpr
     b = LogBuilder(name=name)
     env: dict[Any, str] = {}
     named: dict[str, str] = {}
-    total_bytes = 0
-    total_flops = 0.0
+    totals = {"bytes": 0, "flops": 0.0}
 
-    def lookup(v) -> str:
-        # Literals become fresh constants.
+    def lookup(v, env) -> str:
+        # Literals become fresh constants (builder-unique names: per-scope
+        # env sizes repeat across unrolled scan iterations).
         if not hasattr(v, "count") and hasattr(v, "val"):
-            t = b.constant(_aval_bytes(v.aval), name=f"lit{len(env)}")
-            return t
+            return b.constant(_aval_bytes(v.aval), name=b.fresh("lit"))
         return env[v]
+
+    def emit_call(eqn, cost: float, env, op: str | None = None) -> None:
+        cost = max(cost, 1.0)
+        ins = [lookup(v, env) for v in eqn.invars]
+        sizes = [_aval_bytes(o.aval) for o in eqn.outvars]
+        prim = eqn.primitive.name
+        # View-like ops share their input's storage (paper alias semantics);
+        # `name` in particular must alias so that evicting the producer
+        # registers against the checkpoint_name tag.  optimization_barrier
+        # is identity on every operand — without the alias each scanned
+        # layer's parameters would count as a fresh activation-sized copy.
+        aliases = None
+        if prim == "optimization_barrier" and len(ins) == len(sizes):
+            aliases = list(ins)
+        elif prim in ("name", "reshape", "transpose", "squeeze") and ins:
+            aliases = [ins[0]] * len(sizes)
+        outs = b.call(ins, sizes, cost, op or prim, aliases=aliases)
+        for o, t in zip(eqn.outvars, outs):
+            env[o] = t
+            totals["bytes"] += _aval_bytes(o.aval)
+        totals["flops"] += cost
+        if prim == "name":
+            named[eqn.params["name"]] = outs[0]
+
+    # stack-output log tensor -> its per-iteration parts.  A later unrolled
+    # scan consuming a stacked output as xs reads the parts directly instead
+    # of slicing the monolithic storage — the fwd-residuals -> bwd-scan path
+    # would otherwise make every backward step depend on the whole stacked
+    # array, which locks ~the entire activation peak during remat.
+    stacked: dict[str, list[str]] = {}
+
+    def unroll_scan(eqn, env, depth: int) -> None:
+        length = max(int(eqn.params.get("length", 1)), 1)
+        reverse = bool(eqn.params.get("reverse", False))
+        inner = eqn.params["jaxpr"]
+        ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+        nc = int(eqn.params.get("num_consts", 0))
+        nk = int(eqn.params.get("num_carry", 0))
+        invals = [lookup(v, env) for v in eqn.invars]
+        cvals, carry, xs = invals[:nc], invals[nc:nc + nk], invals[nc + nk:]
+        const_env: dict[Any, str] = {}
+        for v, cv in zip(ij.constvars, getattr(inner, "consts", ())):
+            const_env[v] = b.constant(
+                int(getattr(cv, "nbytes", _aval_bytes(v.aval))),
+                name=f"scanconst{depth}_{len(const_env)}")
+        n_ys = len(eqn.outvars) - nk
+        ys_parts: list[list[str]] = [[] for _ in range(n_ys)]
+        for it in range(length):
+            benv: dict[Any, str] = dict(const_env)
+            xe: list[str] = []
+            for xi, xv in enumerate(xs):
+                var = ij.invars[nc + nk + xi]
+                parts = stacked.get(xv)
+                if parts is not None and len(parts) == length:
+                    xe.append(parts[length - 1 - it if reverse else it])
+                    continue
+                sz = _aval_bytes(var.aval)
+                # A per-iteration slice is a view of the stacked operand
+                # (XLA reads it in place); a fresh storage per layer would
+                # double-count every scanned parameter stack as activation
+                # memory.
+                (t,) = b.call([xv], [sz],
+                              max(0.1 * _aval_elems(var.aval), 1.0),
+                              "scan_slice", aliases=[xv])
+                xe.append(t)
+            for var, val in zip(ij.invars, cvals + carry + xe):
+                benv[var] = val
+            emit(ij, benv, depth + 1)
+            outs = [lookup(v, benv) for v in ij.outvars]
+            carry = outs[:nk]
+            for yi in range(n_ys):
+                ys_parts[yi].append(outs[nk + yi])
+        if reverse:
+            ys_parts = [list(reversed(p)) for p in ys_parts]
+        for var, val in zip(eqn.outvars[:nk], carry):
+            env[var] = val
+        for yi, var in enumerate(eqn.outvars[nk:]):
+            sz = _aval_bytes(var.aval)
+            (t,) = b.call(ys_parts[yi], [sz],
+                          max(0.1 * _aval_elems(var.aval), 1.0),
+                          "scan_stack")
+            env[var] = t
+            stacked[t] = ys_parts[yi]
+            totals["bytes"] += sz
+
+    def emit(jx, env, depth: int = 0) -> None:
+        for eqn in jx.eqns:
+            prim = eqn.primitive.name
+            if prim in ("pjit", "closed_call", "core_call",
+                        "custom_jvp_call", "custom_vjp_call",
+                        "custom_vjp_call_jaxpr", "remat", "checkpoint",
+                        "custom_lin"):
+                inner = None
+                for key in ("jaxpr", "call_jaxpr", "fun_jaxpr"):
+                    if key in eqn.params:
+                        inner = eqn.params[key]
+                        break
+                if inner is not None:
+                    ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                    if unroll_scans and not getattr(inner, "consts", ()):
+                        # Inline the call body: sub-eqns bind directly.
+                        benv: dict[Any, str] = {}
+                        for var, v in zip(ij.invars, eqn.invars):
+                            benv[var] = lookup(v, env)
+                        emit(ij, benv, depth + 1)
+                        for var, v in zip(eqn.outvars, ij.outvars):
+                            env[var] = lookup(v, benv)
+                        continue
+                    total = sum(_eqn_cost(e, s)
+                                for e, s in _flatten_eqns(ij, depth + 1))
+                    emit_call(eqn, total, env)
+                    continue
+            if prim == "scan":
+                length = eqn.params.get("length", 1)
+                if unroll_scans and length <= unroll_limit:
+                    unroll_scan(eqn, env, depth)
+                    continue
+                inner = eqn.params["jaxpr"]
+                ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+                total = sum(_eqn_cost(e, s)
+                            for e, s in _flatten_eqns(ij, depth + 1)
+                            ) * length
+                emit_call(eqn, total, env)
+                continue
+            if prim in ("while", "cond"):
+                emit_call(eqn, float(sum(_aval_elems(o.aval)
+                                         for o in eqn.outvars)), env)
+                continue
+            emit_call(eqn, eqn_flops(eqn), env)
 
     for v, cv in zip(jaxpr.constvars, closed.consts):
         env[v] = b.constant(
@@ -167,33 +316,14 @@ def trace_to_log(fn: Callable, *example_args, name: str = "traced",
     for v in jaxpr.invars:
         env[v] = b.constant(_aval_bytes(v.aval), name=f"in_{v}")
 
-    for eqn, scale in _flatten_eqns(jaxpr):
-        if isinstance(scale, tuple):
-            cost = max(scale[1], 1.0)
-        else:
-            cost = max(eqn_flops(eqn) * scale, 1.0)
-        ins = [lookup(v) for v in eqn.invars]
-        sizes = [_aval_bytes(o.aval) for o in eqn.outvars]
-        prim = eqn.primitive.name
-        # View-like ops share their input's storage (paper alias semantics);
-        # `name` in particular must alias so that evicting the producer
-        # registers against the checkpoint_name tag.
-        aliases = None
-        if prim in ("name", "reshape", "transpose", "squeeze") and ins:
-            aliases = [ins[0]] * len(sizes)
-        outs = b.call(ins, sizes, cost, prim, aliases=aliases)
-        for o, t in zip(eqn.outvars, outs):
-            env[o] = t
-            total_bytes += _aval_bytes(o.aval)
-        total_flops += cost
-        if prim == "name":
-            named[eqn.params["name"]] = outs[0]
+    emit(jaxpr, env)
 
-    outputs = [env[v] if hasattr(v, "count") or v in env else lookup(v)
+    outputs = [env[v] if hasattr(v, "count") or v in env else lookup(v, env)
                for v in jaxpr.outvars]
     log = b.auto_release(keep=outputs)
     return TracedGraph(log=log, named=named, outputs=outputs,
-                       total_bytes=total_bytes, total_flops=total_flops)
+                       total_bytes=totals["bytes"],
+                       total_flops=totals["flops"])
 
 
 # ---------------------------------------------------------------------------

@@ -71,6 +71,24 @@ def _frag_fields(rt: DTRRuntime) -> dict:
                 evict_windows=frag.evict_windows)
 
 
+def result_from_runtime(rt: DTRRuntime, budget: float, ok: bool,
+                        error: str = "") -> RunResult:
+    """Assemble a RunResult from a finished (or aborted) runtime.
+
+    Single source of truth for the field mapping — ``simulate`` and the
+    trace subsystem's ``run_trace`` both build their results here, so the
+    two report paths cannot drift.
+    """
+    return RunResult(
+        budget=budget, ok=ok, error=error,
+        slowdown=rt.slowdown() if ok else float("inf"),
+        compute=rt.total_compute, base_compute=rt.base_compute,
+        evictions=rt.evictions, remat_ops=rt.remat_ops,
+        ops_executed=rt.ops_executed,
+        meta_accesses=rt.meta_accesses + (rt.uf.accesses if rt.uf else 0),
+        peak_memory=rt.peak_memory, **_frag_fields(rt))
+
+
 @dataclass
 class SweepResult:
     log_name: str
@@ -91,6 +109,22 @@ def measure_baseline(log: Log) -> tuple[float, float]:
                     dealloc="eager")
     replay(log, rt)
     return rt.peak_memory, rt.total_compute
+
+
+def resolve_budget(fraction: float, peak: float, pinned: float,
+                   budget_mode: str = "peak") -> float:
+    """Map a budget fraction to absolute bytes.
+
+    ``"peak"``: fraction of the unconstrained peak (the paper's Fig. 2 axis).
+    ``"activation"``: ``pinned + fraction * (peak - pinned)`` — scans the
+    evictable (activation/KV) range, which is the meaningful knob for
+    captured serving traces whose pinned weights dominate peak.
+    """
+    if budget_mode == "peak":
+        return fraction * peak
+    if budget_mode == "activation":
+        return pinned + fraction * max(peak - pinned, 0.0)
+    raise ValueError(f"unknown budget_mode {budget_mode!r}")
 
 
 def simulate(
@@ -116,22 +150,8 @@ def simulate(
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
-        return RunResult(budget=budget, ok=False, error=str(e),
-                         compute=rt.total_compute,
-                         base_compute=rt.base_compute,
-                         evictions=rt.evictions, remat_ops=rt.remat_ops,
-                         ops_executed=rt.ops_executed,
-                         peak_memory=rt.peak_memory,
-                         meta_accesses=rt.meta_accesses
-                         + (rt.uf.accesses if rt.uf else 0),
-                         **_frag_fields(rt))
-    return RunResult(
-        budget=budget, ok=True, slowdown=rt.slowdown(),
-        compute=rt.total_compute, base_compute=rt.base_compute,
-        evictions=rt.evictions, remat_ops=rt.remat_ops,
-        ops_executed=rt.ops_executed,
-        meta_accesses=rt.meta_accesses + (rt.uf.accesses if rt.uf else 0),
-        peak_memory=rt.peak_memory, **_frag_fields(rt))
+        return result_from_runtime(rt, budget, ok=False, error=str(e))
+    return result_from_runtime(rt, budget, ok=True)
 
 
 def sweep(
@@ -143,16 +163,21 @@ def sweep(
     alloc_mode: str | None = None,
     placement: str = "best_fit",
     index: bool = True,
+    budget_mode: str = "peak",
+    thrash_factor: float = 50.0,
 ) -> SweepResult:
     peak, _ = measure_baseline(log)
+    pinned = log.pinned_bytes()
     out = SweepResult(log_name=log.name, heuristic=heuristic,
                       baseline_peak=peak, alloc_mode=alloc_mode or "counter")
     for f in fractions:
         # Fresh heuristic per run (h_rand carries RNG state; h_eq carries UF).
         out.runs.append(
-            simulate(log, by_name(heuristic, seed), budget=f * peak,
+            simulate(log, by_name(heuristic, seed),
+                     budget=resolve_budget(f, peak, pinned, budget_mode),
                      dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
-                     placement=placement, index=index))
+                     placement=placement, index=index,
+                     thrash_factor=thrash_factor))
         out.runs[-1].budget = f  # report as fraction
     return out
 
@@ -166,11 +191,12 @@ def _simulate_task(payload: tuple) -> RunResult:
     JSON-lines serialization so the payload pickles cheaply and
     deterministically on every start method."""
     (text, name, heuristic, budget, frac, dealloc, seed, alloc_mode,
-     placement, index) = payload
+     placement, index, thrash_factor) = payload
     log = Log.loads(text, name=name)
     r = simulate(log, by_name(heuristic, seed), budget=budget,
                  dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
-                 placement=placement, index=index)
+                 placement=placement, index=index,
+                 thrash_factor=thrash_factor)
     r.budget = frac  # report as fraction
     return r
 
@@ -185,6 +211,8 @@ def sweep_parallel(
     placement: str = "best_fit",
     index: bool = True,
     processes: int | None = None,
+    budget_mode: str = "peak",
+    thrash_factor: float = 50.0,
 ) -> list[SweepResult]:
     """Sweep the budgets × heuristics × models grid across processes.
 
@@ -200,11 +228,13 @@ def sweep_parallel(
                   else list(heuristics))
     # Keyed positionally, not by log.name: duplicate names must not collide.
     baselines = [measure_baseline(log)[0] for log in logs]
+    pinned = [log.pinned_bytes() for log in logs]
     texts = [log.dumps() for log in logs]
     grid = [(i, h) for i in range(len(logs)) for h in heuristics]
     payloads = [
-        (texts[i], logs[i].name, h, f * baselines[i], f,
-         dealloc, seed, alloc_mode, placement, index)
+        (texts[i], logs[i].name, h,
+         resolve_budget(f, baselines[i], pinned[i], budget_mode), f,
+         dealloc, seed, alloc_mode, placement, index, thrash_factor)
         for i, h in grid for f in fractions]
 
     runs: list[RunResult] | None = None

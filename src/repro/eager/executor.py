@@ -49,7 +49,7 @@ class DTRArray:
                    * jnp.dtype(self.dtype).itemsize)
 
     def release(self) -> None:
-        self.ctx.rt.release(self.tid)
+        self.ctx.release_tid(self.tid)
 
     # Convenience arithmetic (sugar over ctx.call).
     def __add__(self, other):
@@ -73,7 +73,7 @@ class DTRContext:
     def __init__(self, budget_bytes: float, heuristic: str = "h_dtr_eq",
                  dealloc: str = "eager", use_wallclock_cost: bool = True,
                  seed: int = 0, alloc_mode: str | None = None,
-                 placement: str = "best_fit"):
+                 placement: str = "best_fit", recorder=None):
         # alloc_mode="pool" maps the real JAX buffers onto simulated pool
         # accounting: every resident storage occupies a contiguous block and
         # memory pressure evicts contiguous windows (repro.alloc), so eager
@@ -89,6 +89,10 @@ class DTRContext:
         self.use_wallclock_cost = use_wallclock_cost
         self._pending_outputs: list[jax.Array] | None = None
         self.remat_runs = 0
+        # Optional repro.trace.TraceRecorder: mirrors every wrap/call/release
+        # into a core.graph.Log (first executions only — rematerializations
+        # are the runtime's own doing, not part of the operator stream).
+        self.recorder = recorder
 
     # ------------------------------------------------------------------
     # Public API
@@ -98,6 +102,10 @@ class DTRContext:
         x = jnp.asarray(x)
         tid = self.rt.constant(x.nbytes, name=name)
         self.buffers[tid] = x
+        if self.recorder is not None:
+            self.recorder.on_constant(tid, name, int(x.nbytes),
+                                      shape=tuple(x.shape),
+                                      dtype=str(x.dtype))
         return DTRArray(self, tid, x.shape, x.dtype)
 
     def fetch(self, a: DTRArray) -> jax.Array:
@@ -132,11 +140,20 @@ class DTRContext:
         self._pending_outputs = list(outs)
         oid = self.rt._next_oid
         self.closures[oid] = replay
-        tids = self.rt.call(name, cost, in_tids,
-                            [int(o.nbytes) for o in outs])
+        out_sizes = [int(o.nbytes) for o in outs]
+        tids = self.rt.call(name, cost, in_tids, out_sizes)
         self._pending_outputs = None
+        if self.recorder is not None:
+            self.recorder.on_call(name, cost, in_tids, tids, out_sizes,
+                                  shapes=[tuple(o.shape) for o in outs])
         return [DTRArray(self, tid, o.shape, o.dtype)
                 for tid, o in zip(tids, outs)]
+
+    def release_tid(self, tid: int) -> None:
+        """Drop one external reference (recorded when tracing)."""
+        if self.recorder is not None:
+            self.recorder.on_release(tid)
+        self.rt.release(tid)
 
     def fragmentation(self):
         """Pool telemetry (``repro.alloc.FragStats``); None in counter mode."""

@@ -1,0 +1,17 @@
+"""Version-compatibility shims for the Pallas TPU API surface.
+
+The container's jax pins an older Pallas: ``pltpu.CompilerParams`` was named
+``TPUCompilerParams`` before the rename, and kernels must construct whichever
+exists so interpret-mode validation runs on any supported jax.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(dimension_semantics: tuple[str, ...]):
+    """Build the TPU compiler-params object across the rename."""
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(dimension_semantics=tuple(dimension_semantics))

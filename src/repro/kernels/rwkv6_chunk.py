@@ -19,6 +19,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from .pallas_compat import compiler_params
+
 DEFAULT_CHUNK = 64
 # The separable decay factorization exp(cumW_t)*exp(-cumW_s) is bounded only
 # while |cum log-decay| stays within f32 exponent range; 64 steps of the
@@ -107,8 +109,8 @@ def rwkv6_chunk(r, k, v, w_log, u, *, chunk: int = DEFAULT_CHUNK,
         out_specs=pl.BlockSpec((1, chunk, d), seq_map),
         out_shape=jax.ShapeDtypeStruct((bh, s, d), jnp.float32),
         scratch_shapes=[pltpu.VMEM((d, d), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary")),
+        compiler_params=compiler_params(
+            ("parallel", "arbitrary")),
         interpret=interpret,
     )(r, k, v, w_log, u)
     return out

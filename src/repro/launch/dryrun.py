@@ -29,7 +29,7 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
-from repro.analysis.hlo import parse_collectives
+from repro.analysis.hlo import parse_collectives, xla_cost_dict
 from repro.analysis.hlo_cost import analyze as analyze_hlo
 from repro.analysis.roofline import (
     model_flops_decode, model_flops_prefill, model_flops_train, roofline)
@@ -176,7 +176,7 @@ def build_cell(arch: str, shape: str, mesh, overrides=None, remat="full",
         compiled = lowered.compile()
         compile_s = time.time() - t0
         mem = compiled.memory_analysis()
-        cost_xla = compiled.cost_analysis()
+        cost_xla = xla_cost_dict(compiled.cost_analysis())
         hlo = compiled.as_text()
         # Loop-aware analyzer: while bodies (layer scans, grad-accum,
         # blocked attention) weighted by known_trip_count — XLA's own

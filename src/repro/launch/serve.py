@@ -7,6 +7,11 @@ scale; on hardware the mesh flag drives the full slice.
 
   PYTHONPATH=src python -m repro.launch.serve --arch llama3.2-1b --smoke \
       --requests 12 --slots 4 --gen 16
+
+``--capture PATH`` additionally records the executed per-request/slot
+operator stream as a DTR log (``repro.trace``): every admission, decode
+step, and retirement the loop actually performs is mirrored into the trace,
+so budget sweeps replay *this* serving run, not a synthetic stand-in.
 """
 from __future__ import annotations
 
@@ -37,7 +42,21 @@ def main(argv=None):
     ap.add_argument("--gen", type=int, default=16,
                     help="tokens to generate per request")
     ap.add_argument("--max-len", type=int, default=128)
+    ap.add_argument("--capture", default=None, metavar="PATH",
+                    help="record the executed operator stream as a DTR "
+                         "trace log (repro.trace)")
     args = ap.parse_args(argv)
+
+    tracer = None
+    if args.capture:
+        from repro.trace.capture import (WorkloadTrace,
+                                         step_model_from_config)
+        tracer = WorkloadTrace(
+            step_model_from_config(args.arch, smoke=args.smoke),
+            name=f"serve_{args.arch}_s{args.slots}",
+            meta={"source": "launch.serve", "arch": args.arch,
+                  "slots": args.slots, "requests": args.requests,
+                  "gen": args.gen, "smoke": bool(args.smoke)})
 
     cfg = (configs.get_smoke(args.arch) if args.smoke
            else configs.get(args.arch))
@@ -102,11 +121,22 @@ def main(argv=None):
                 for i, s in enumerate(slots):
                     if s is None:
                         continue
+                    if tracer is not None:
+                        if s["i"] == 0:
+                            tracer.prefill(s["rid"], i, 1)
+                        else:
+                            tracer.decode(
+                                s["rid"], i, pos,
+                                phase="prompt" if pos < len(s["prompt"])
+                                else "decode")
+                        s["i"] += 1
                     if pos >= len(s["prompt"]) - 1:
                         s["out"].append(int(nxt_np[i, 0]))
                         tok[i, 0] = nxt_np[i, 0]
                     if len(s["out"]) >= args.gen:
                         completed[s["rid"]] = s["out"]
+                        if tracer is not None:
+                            tracer.retire(s["rid"], i)
                         slots[i] = None
             # wave done; loop refills from queue
 
@@ -116,6 +146,12 @@ def main(argv=None):
               f"({dt/max(steps,1)*1e3:.1f} ms/step batched x{args.slots})")
         for rid in sorted(completed)[:4]:
             print(f"  req{rid}: {completed[rid][:10]}...")
+        if tracer is not None:
+            log = tracer.finish()
+            with open(args.capture, "w") as f:
+                f.write(log.dumps() + "\n")
+            print(f"captured trace {log.name}: {log.op_count()} ops "
+                  f"-> {args.capture}")
 
 
 if __name__ == "__main__":

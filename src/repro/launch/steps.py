@@ -86,6 +86,24 @@ def make_serve_step(cfg: ModelConfig):
     return serve_step
 
 
+def serve_step_structs(arch: str, *, smoke: bool = True, slots: int = 4,
+                       max_len: int = 64):
+    """(cfg, example_args) for tracing ``make_serve_step`` without params.
+
+    The args are ``ShapeDtypeStruct`` trees, so the step can be lowered or
+    jaxpr-captured (``repro.trace``) with zero parameter allocation.
+    """
+    from .. import configs
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    params = M.param_structs(cfg)
+    cache = M.cache_structs(cfg, slots, max_len)
+    token = jax.ShapeDtypeStruct(
+        (slots, 1) if not cfg.n_codebooks else (slots, 1, cfg.n_codebooks),
+        np.dtype("int32"))
+    pos = jax.ShapeDtypeStruct((), np.dtype("int32"))
+    return cfg, (params, cache, token, pos)
+
+
 # ---------------------------------------------------------------------------
 # Sharding of the full train state
 # ---------------------------------------------------------------------------

@@ -212,6 +212,27 @@ def _maybe_remat(cfg: ModelConfig, fn):
 # Forward (train)
 # ---------------------------------------------------------------------------
 
+@jax.custom_vjp
+def _opt_barrier(tree):
+    """Differentiable ``optimization_barrier`` (older jax has no AD rule).
+
+    The barrier is identity; cotangents pass through their own barrier so the
+    backward pass keeps the same hoisting protection as the forward.
+    """
+    return jax.lax.optimization_barrier(tree)
+
+
+def _opt_barrier_fwd(tree):
+    return jax.lax.optimization_barrier(tree), None
+
+
+def _opt_barrier_bwd(_, ct):
+    return (jax.lax.optimization_barrier(ct),)
+
+
+_opt_barrier.defvjp(_opt_barrier_fwd, _opt_barrier_bwd)
+
+
 def _embed(cfg: ModelConfig, p, tokens):
     dt = L.adtype(cfg)
     if cfg.n_codebooks > 0:
@@ -254,7 +275,7 @@ def forward(cfg: ModelConfig, params, tokens, img_embed=None):
             # body — without it XLA commutes gather/slice and hoists the
             # full gathered param stack out of the loop (81 GiB resident
             # for deepseek-v3; EXPERIMENTS.md §Perf cell B).
-            slot_params = jax.lax.optimization_barrier(slot_params)
+            slot_params = _opt_barrier(slot_params)
             h = carry
             for i, kind in enumerate(kinds):
                 h, _ = block_apply(cfg, kind, slot_params[f"slot{i}"], h,
@@ -265,7 +286,7 @@ def forward(cfg: ModelConfig, params, tokens, img_embed=None):
 
     if cfg.n_dense_layers:
         def dense_body(carry, lp):
-            lp = jax.lax.optimization_barrier(lp)
+            lp = _opt_barrier(lp)
             h, _ = block_apply(cfg, "attn", lp, carry, positions=positions,
                                moe_layer=False)
             return h, None

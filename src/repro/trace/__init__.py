@@ -1,0 +1,26 @@
+"""Trace capture & replay: serve/train workloads as first-class DTR logs.
+
+The bridge between the ``repro.launch`` production layer and the ``repro.core``
+DTR engine: capture operator streams from the eager executor, from jaxpr-
+lowered serve/train steps, or from a continuous-batching serve driver — then
+replay them through the simulator to verify engine equivalence and size
+memory budgets on *real* dynamic traces instead of hand-built DAGs.
+
+CLI: ``python -m repro.trace capture|replay|report``.
+"""
+from .capture import (ServeStepModel, WorkloadTrace, capture_eager_mlp,
+                      capture_eager_treelstm, capture_jaxpr,
+                      capture_serve_step, capture_serve_trace,
+                      capture_train_step, step_model_from_config)
+from .record import TraceRecorder
+from .replay import (DEFAULT_FRACTIONS, SEPARABLE, replay_budget_curve,
+                     run_trace, smallest_budget, verify_oracle_equivalence)
+
+__all__ = [
+    "ServeStepModel", "WorkloadTrace", "TraceRecorder",
+    "capture_eager_mlp", "capture_eager_treelstm", "capture_jaxpr",
+    "capture_serve_step", "capture_serve_trace", "capture_train_step",
+    "step_model_from_config",
+    "DEFAULT_FRACTIONS", "SEPARABLE", "replay_budget_curve", "run_trace",
+    "smallest_budget", "verify_oracle_equivalence",
+]

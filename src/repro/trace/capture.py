@@ -1,0 +1,395 @@
+"""Capture operator streams from real serve/train workloads as DTR Logs.
+
+Three capture sources (the bridge between ``repro.launch`` and the DTR core):
+
+* :func:`capture_jaxpr` — walk the jaxpr of any step function (per-eqn sizes
+  from avals; costs from the analytic FLOPs model, rescaled against the
+  loop-aware optimized-HLO analysis ``repro.analysis.hlo_cost`` when the step
+  compiles, unit costs as the last resort).
+* :func:`capture_serve_step` / :func:`capture_train_step` — the above applied
+  to ``launch.steps.make_serve_step`` / ``make_train_step`` over
+  ``ShapeDtypeStruct`` trees (no parameter allocation needed).
+* :class:`WorkloadTrace` + :func:`capture_serve_trace` — a continuous-batching
+  decode driver at the slot level: per-request KV caches grow token by token,
+  finished slots retire their storages and are immediately refilled, so the
+  captured log exercises the interleaved dynamic lifetimes no synthetic graph
+  in ``core.graphs`` produces.  Every instruction is tagged with
+  request/slot/position metadata.
+"""
+from __future__ import annotations
+
+import dataclasses
+import random
+from collections import deque
+from dataclasses import dataclass
+from typing import Callable
+
+from ..core.graph import Call, Log, LogBuilder, Mutate
+from ..core.planner import trace_to_log
+
+
+# ---------------------------------------------------------------------------
+# jaxpr capture
+# ---------------------------------------------------------------------------
+
+def _rewrite_costs(log: Log, fn: Callable[[float], float]) -> Log:
+    out = [dataclasses.replace(i, cost=fn(i.cost))
+           if isinstance(i, (Call, Mutate)) else i for i in log.instrs]
+    return Log(out, name=log.name, meta=dict(log.meta))
+
+
+def capture_jaxpr(fn, *args, name: str = "step",
+                  cost_model: str = "hlo", meta=None,
+                  unroll_scans: bool = True, **kwargs) -> Log:
+    """Lower ``fn(*args)`` (traceable; args may be ShapeDtypeStructs) to a Log.
+
+    ``cost_model``: ``"hlo"`` rescales per-eqn FLOPs so their total matches
+    the loop-aware optimized-HLO analysis (falls back to ``"flops"`` when the
+    step does not compile on this host); ``"flops"`` uses the analytic
+    per-eqn estimate; ``"unit"`` assigns cost 1.0 per op (bit-reproducible
+    across jax versions — used for golden traces).
+    """
+    assert cost_model in ("hlo", "flops", "unit")
+    tg = trace_to_log(fn, *args, name=name, unroll_scans=unroll_scans,
+                      **kwargs)
+    log = tg.log
+    log.meta = dict({"source": "jaxpr", "cost_model": cost_model,
+                     "unroll_scans": bool(unroll_scans),
+                     "ops": log.op_count()}, **(meta or {}))
+    if cost_model == "unit":
+        return _rewrite_costs(log, lambda c: 1.0)
+    if cost_model == "hlo":
+        try:
+            import jax
+            from ..analysis.hlo_cost import analyze
+            hlo = jax.jit(fn).lower(*args, **kwargs).compile().as_text()
+            total = analyze(hlo).flops
+            if total > 0 and tg.total_flops > 0:
+                scale = total / tg.total_flops
+                log.meta["cost_model"] = "hlo"
+                log.meta["hlo_flops"] = total
+                return _rewrite_costs(log, lambda c: c * scale)
+        except Exception:
+            pass
+        log.meta["cost_model"] = "flops"  # fallback actually used
+    return log
+
+
+def capture_serve_step(arch: str = "qwen2-0.5b", *, smoke: bool = True,
+                       slots: int = 4, max_len: int = 64,
+                       cost_model: str = "hlo") -> Log:
+    """Log of one continuous-batching decode step (``make_serve_step``)."""
+    from ..launch.steps import make_serve_step, serve_step_structs
+    cfg, args = serve_step_structs(arch, smoke=smoke, slots=slots,
+                                   max_len=max_len)
+    return capture_jaxpr(
+        make_serve_step(cfg), *args,
+        name=f"serve_step_{arch}_s{slots}", cost_model=cost_model,
+        meta={"arch": arch, "slots": slots, "max_len": max_len,
+              "kind": "serve_step"})
+
+
+def capture_train_step(arch: str = "qwen2-0.5b", *, smoke: bool = True,
+                       batch: int = 2, seq: int = 16,
+                       cost_model: str = "hlo") -> Log:
+    """Log of one differentiated train step (fwd + bwd lifetimes)."""
+    import jax
+    import numpy as np
+    from .. import configs
+    from ..models import model as M
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    params = M.param_structs(cfg)
+    tokens = jax.ShapeDtypeStruct(
+        (batch, seq) if not cfg.n_codebooks
+        else (batch, seq, cfg.n_codebooks), np.dtype("int32"))
+
+    def step(p, t):
+        return jax.value_and_grad(lambda pp: M.loss_fn(cfg, pp,
+                                                       {"tokens": t}))(p)
+
+    return capture_jaxpr(
+        step, params, tokens,
+        name=f"train_step_{arch}_b{batch}x{seq}", cost_model=cost_model,
+        meta={"arch": arch, "batch": batch, "seq": seq, "kind": "train_step"})
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serve driver (slot-level operator stream)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ServeStepModel:
+    """Per-slot size/cost model for one decode step of a given config."""
+    weight_bytes: int            # pinned parameter storage
+    hidden_bytes: int            # per-slot residual-stream activation
+    kv_token_bytes: int          # per-slot KV-cache growth per position
+    decode_cost: float           # per-slot per-token step cost (flops)
+    attn_token_cost: float       # extra cost per resident KV position
+    prefill_token_cost: float    # per prompt token (chunked prefill)
+
+
+def step_model_from_config(arch: str = "qwen2-0.5b", *, smoke: bool = True,
+                           use_jaxpr_cost: bool = False) -> ServeStepModel:
+    """Derive the slot-level model from the real architecture config.
+
+    Sizes come from the parameter / KV-cache struct trees the launch layer
+    allocates; costs are analytic (2 FLOPs per weight per token — the
+    standard decode estimate) unless ``use_jaxpr_cost`` asks for the traced
+    step's FLOPs total.  Everything is integer-derived, so the resulting
+    traces are bit-reproducible across hosts and jax versions.
+    """
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from .. import configs
+    from ..models import model as M
+    cfg = configs.get_smoke(arch) if smoke else configs.get(arch)
+    probe_slots, probe_len = 2, 16
+    p_leaves = jax.tree.leaves(M.param_structs(cfg))
+    weight_bytes = int(sum(int(np.prod(x.shape, dtype=np.int64))
+                           * np.dtype(x.dtype).itemsize for x in p_leaves))
+    c_leaves = jax.tree.leaves(M.cache_structs(cfg, probe_slots, probe_len))
+    cache_bytes = int(sum(int(np.prod(x.shape, dtype=np.int64))
+                          * np.dtype(x.dtype).itemsize for x in c_leaves))
+    kv_token_bytes = max(cache_bytes // (probe_slots * probe_len), 1)
+    act_bytes = 2 if cfg.param_dtype in ("bfloat16", "float16") else 4
+    hidden_bytes = int(cfg.d_model) * act_bytes
+    # jnp.dtype, not np.dtype: plain numpy does not resolve "bfloat16".
+    n_params = weight_bytes // max(
+        jnp.dtype(cfg.param_dtype).itemsize, 1)
+    decode_cost = 2.0 * n_params
+    if use_jaxpr_cost:
+        try:
+            log = capture_serve_step(arch, smoke=smoke, slots=1,
+                                     max_len=probe_len, cost_model="hlo")
+            decode_cost = max(log.baseline_cost(), 1.0)
+        except Exception:
+            pass
+    kv_token_elems = kv_token_bytes // act_bytes
+    return ServeStepModel(
+        weight_bytes=weight_bytes, hidden_bytes=hidden_bytes,
+        kv_token_bytes=kv_token_bytes, decode_cost=float(decode_cost),
+        attn_token_cost=2.0 * kv_token_elems,
+        prefill_token_cost=float(decode_cost))
+
+
+class WorkloadTrace:
+    """Emit a serving workload as a Log, one op stream per (request, slot).
+
+    Used by the pure continuous-batching driver below and by
+    ``launch/serve.py --capture`` (which mirrors the steps it actually
+    executed).  The KV cache is *paged*: every ``kv_chunk`` positions the
+    working cache seals into an immutable chunk storage that later decode
+    steps read but never replace.  Chunks of idle slots are individually
+    evictable, and rematerializing one replays the decode that sealed it —
+    whose own inputs (the hidden state of that step, earlier chunks) may
+    themselves be evicted — producing the deep, interleaved rematerialization
+    chains that static training DAGs never exhibit.
+    """
+
+    def __init__(self, model: ServeStepModel, name: str = "serve_trace",
+                 meta=None, kv_chunk: int = 4) -> None:
+        self.model = model
+        self.kv_chunk = max(int(kv_chunk), 1)
+        self.b = LogBuilder(name=name)
+        self.b.log.meta = dict(
+            {"source": "serve_driver", "kv_chunk": self.kv_chunk,
+             "step_model": dataclasses.asdict(model)}, **(meta or {}))
+        self.params = self.b.constant(model.weight_bytes, name="params")
+        # slot -> {"cur": name|None, "cur_len": int, "h": name,
+        #          "chunks": [names], "klen": int}
+        self._slot: dict[int, dict] = {}
+
+    def _seal_if_full(self, st: dict) -> None:
+        if st["cur"] is not None and st["cur_len"] >= self.kv_chunk:
+            st["chunks"].append(st["cur"])
+            st["cur"] = None
+            st["cur_len"] = 0
+
+    def prefill(self, rid: int, slot: int, plen: int) -> None:
+        """Chunked prefill: one op per full page + the partial working page."""
+        if plen < 1:
+            raise ValueError(f"prefill needs plen >= 1, got {plen}")
+        m = self.model
+        st = {"cur": None, "cur_len": 0, "h": None, "chunks": [],
+              "klen": 0, "rid": rid}
+        done = 0
+        while done < plen:
+            take = min(self.kv_chunk, plen - done)
+            outs = self.b.call(
+                [self.params] + st["chunks"],
+                [m.kv_token_bytes * take, m.hidden_bytes],
+                m.prefill_token_cost * take + m.attn_token_cost * done,
+                "prefill",
+                out_names=[f"kv.r{rid}.{done + take}",
+                           f"h.r{rid}.p{done + take}"],
+                meta={"rid": rid, "slot": slot, "phase": "prefill",
+                      "plen": plen, "pos": done})
+            if st["h"] is not None:
+                self.b.release(st["h"])
+            st["cur"], st["h"] = outs
+            st["cur_len"] = take
+            st["klen"] = done + take
+            done += take
+            self._seal_if_full(st)
+        self._slot[slot] = st
+
+    def decode(self, rid: int, slot: int, pos: int,
+               phase: str = "decode") -> None:
+        m = self.model
+        st = self._slot[slot]
+        ins = [self.params, st["h"]] + st["chunks"]
+        if st["cur"] is not None:
+            ins.append(st["cur"])
+        klen = st["klen"]
+        kv2, h2 = self.b.call(
+            ins,
+            [m.kv_token_bytes * (st["cur_len"] + 1), m.hidden_bytes],
+            m.decode_cost + m.attn_token_cost * klen, "decode",
+            out_names=[f"kv.r{rid}.{klen + 1}", f"h.r{rid}.{klen + 1}"],
+            meta={"rid": rid, "slot": slot, "pos": pos, "phase": phase})
+        if st["cur"] is not None:
+            self.b.release(st["cur"])
+        self.b.release(st["h"])
+        st["cur"], st["h"] = kv2, h2
+        st["cur_len"] += 1
+        st["klen"] = klen + 1
+        self._seal_if_full(st)
+
+    def retire(self, rid: int, slot: int) -> None:
+        st = self._slot.pop(slot)
+        first = True
+        for c in st["chunks"]:
+            self.b.release(c, meta={"rid": rid, "slot": slot,
+                                    "phase": "retire"} if first else None)
+            first = False
+        if st["cur"] is not None:
+            self.b.release(st["cur"])
+        if st["h"] is not None:
+            self.b.release(st["h"])
+
+    def finish(self) -> Log:
+        return self.b.log
+
+
+def capture_serve_trace(model: ServeStepModel, *, slots: int = 4,
+                        requests: int = 12, gen: int = 16,
+                        prompt_min: int = 4, prompt_max: int = 12,
+                        seed: int = 0, kv_chunk: int = 4,
+                        name: str | None = None) -> Log:
+    """Run the slot-level continuous-batching loop and capture it.
+
+    True continuous batching (unlike the wave-based ``launch/serve.py``
+    loop): a finished slot is refilled on the next global step while its
+    neighbors keep decoding, so KV lifetimes start and end at arbitrary
+    interleaved positions.
+    """
+    rng = random.Random(seed)
+    queue = deque((rid, rng.randint(prompt_min, prompt_max))
+                  for rid in range(requests))
+    wt = WorkloadTrace(
+        model, name=name or f"serve_s{slots}_r{requests}_g{gen}",
+        kv_chunk=kv_chunk,
+        meta={"slots": slots, "requests": requests, "gen": gen,
+              "prompt_min": prompt_min, "prompt_max": prompt_max,
+              "seed": seed})
+    active: dict[int, dict] = {}
+    step = 0
+    while queue or active:
+        for s in range(slots):
+            if s not in active and queue:
+                rid, plen = queue.popleft()
+                wt.prefill(rid, s, plen)
+                active[s] = {"rid": rid, "generated": 0}
+        for s in sorted(active):
+            st = active[s]
+            wt.decode(st["rid"], s, step)
+            st["generated"] += 1
+            if st["generated"] >= gen:
+                wt.retire(st["rid"], s)
+                del active[s]
+        step += 1
+    log = wt.finish()
+    log.meta["steps"] = step
+    return log
+
+
+# ---------------------------------------------------------------------------
+# Eager-executor captures (TraceRecorder through real JAX buffers)
+# ---------------------------------------------------------------------------
+
+def capture_eager_mlp(*, steps: int = 2, din: int = 32, dh: int = 64,
+                      batch: int = 16, seed: int = 0) -> Log:
+    """Manual-backward MLP training loop through the eager DTR executor.
+
+    Unit costs (``use_wallclock_cost=False``) keep the captured log — and
+    every replay decision downstream — bit-reproducible across hosts.
+    """
+    import jax
+    import jax.numpy as jnp
+    from ..eager import DTRContext
+    from .record import TraceRecorder
+    rec = TraceRecorder(name=f"eager_mlp_s{steps}",
+                        meta={"kind": "eager_mlp", "steps": steps,
+                              "din": din, "dh": dh, "batch": batch})
+    ctx = DTRContext(budget_bytes=float("inf"), use_wallclock_cost=False,
+                     recorder=rec)
+    key = jax.random.PRNGKey(seed)
+    w1 = ctx.wrap(jax.random.normal(key, (din, dh)) * 0.05, name="w1")
+    w2 = ctx.wrap(jax.random.normal(key, (dh, 1)) * 0.05, name="w2")
+    xb = ctx.wrap(jax.random.normal(key, (batch, din)), name="x")
+    yb = ctx.wrap(jnp.ones((batch, 1)), name="y")
+    lr = 0.05
+    for step in range(steps):
+        rec.tag(step=step, phase="fwd")
+        h = ctx.call("fc1", jnp.matmul, [xb, w1])[0]
+        a = ctx.call("relu", jax.nn.relu, [h])[0]
+        p = ctx.call("fc2", jnp.matmul, [a, w2])[0]
+        e = ctx.call("err", jnp.subtract, [p, yb])[0]
+        loss = ctx.call("mse", lambda t: jnp.mean(t * t), [e])[0]
+        rec.tag(step=step, phase="bwd")
+        gp = ctx.call("d_mse", lambda t: 2 * t / t.size, [e])[0]
+        gw2 = ctx.call("d_w2", lambda a_, g: a_.T @ g, [a, gp])[0]
+        ga = ctx.call("d_a", lambda g, w: g @ w.T, [gp, w2])[0]
+        gh = ctx.call("d_relu", lambda g, h_: g * (h_ > 0), [ga, h])[0]
+        gw1 = ctx.call("d_w1", lambda x_, g: x_.T @ g, [xb, gh])[0]
+        w1_new = ctx.call("sgd1", lambda w, g: w - lr * g, [w1, gw1])[0]
+        w2_new = ctx.call("sgd2", lambda w, g: w - lr * g, [w2, gw2])[0]
+        for t in (h, a, p, e, loss, gp, gw2, ga, gh, gw1):
+            t.release()
+        w1.release()          # superseded weights (step-0: pinned constants)
+        w2.release()
+        w1, w2 = w1_new, w2_new
+    return rec.finish()
+
+
+def capture_eager_treelstm(*, depth: int = 3, dim: int = 32,
+                           seed: int = 0) -> Log:
+    """Data-dependent recursion (the paper's dynamic headline) captured live."""
+    import jax.numpy as jnp
+    from ..eager import DTRContext
+    from .record import TraceRecorder
+    rec = TraceRecorder(name=f"eager_treelstm_d{depth}",
+                        meta={"kind": "eager_treelstm", "depth": depth,
+                              "dim": dim})
+    ctx = DTRContext(budget_bytes=float("inf"), use_wallclock_cost=False,
+                     recorder=rec)
+    w = ctx.wrap(jnp.eye(dim) * 0.5 + 0.01, name="w")
+
+    def cell(a, b, d):
+        rec.tag(depth=d)
+        s = ctx.call("add", jnp.add, [a, b])[0]
+        rec.tag(depth=d)
+        out = ctx.call("cell", lambda s_, w_: jnp.tanh(s_ @ w_), [s, w])[0]
+        s.release()
+        a.release()
+        b.release()
+        return out
+
+    def build(d, leaf_val):
+        if d == 0:
+            return ctx.wrap(jnp.full((dim,), leaf_val), name="leaf")
+        return cell(build(d - 1, leaf_val), build(d - 1, leaf_val + 0.1), d)
+
+    build(depth, 0.05)
+    return rec.finish()

@@ -1,0 +1,155 @@
+"""Replay captured traces through the DTR engine: verification + budget curves.
+
+``run_trace`` replays one log at one budget and returns the ``RunResult``
+*plus* the full victim sequence (storage ids in eviction order) — the
+decision stream the golden-trace tests pin down.
+
+``verify_oracle_equivalence`` replays a trace through the incremental
+eviction index and the exhaustive linear-scan oracle for every separable
+heuristic, asserting bit-identical decisions (victims, tie-breaks, compute,
+peak) — the acceptance gate for captured serving traces.
+
+``replay_budget_curve`` sweeps budget fractions × heuristics through
+``simulator.sweep_parallel`` (the PR-2 parallel driver) and shapes the
+result for ``BENCH_serving.json``.
+"""
+from __future__ import annotations
+
+from dataclasses import asdict
+
+from ..core.graph import Log, replay
+from ..core.heuristics import ALL_NAMES, by_name
+from ..core.runtime import DTRRuntime, OOMError, ThrashError
+from ..core.simulator import (RunResult, measure_baseline, resolve_budget,
+                              result_from_runtime, simulate, sweep_parallel)
+
+#: Heuristics with a key()/staleness decomposition: the eviction index and
+#: the linear scan must agree bit-exactly on these (h_rand consumes RNG
+#: state per score evaluation, so it is scan-only by design).
+SEPARABLE = tuple(h for h in ALL_NAMES + ["h_estar"] if h != "h_rand")
+
+DEFAULT_FRACTIONS = (0.9, 0.7, 0.5, 0.4, 0.3)
+
+
+def run_trace(log: Log, heuristic: str, budget: float, *,
+              dealloc: str = "eager", index: bool = True, seed: int = 0,
+              thrash_factor: float = 50.0):
+    """Replay ``log`` once; returns (RunResult, victim sid sequence)."""
+    rt = DTRRuntime(budget=budget, heuristic=by_name(heuristic, seed),
+                    dealloc=dealloc, seed=seed,
+                    compute_limit=thrash_factor * log.baseline_cost(),
+                    index=index)
+    victims: list[int] = []
+    inner = rt._evict
+
+    def traced_evict(s):
+        victims.append(s.sid)
+        inner(s)
+
+    rt._evict = traced_evict
+    ok, err = True, ""
+    try:
+        replay(log, rt)
+    except (OOMError, ThrashError) as e:
+        ok, err = False, str(e)
+    return result_from_runtime(rt, budget, ok=ok, error=err), victims
+
+
+#: RunResult fields that must be identical between the index and the scan
+#: oracle (meta_accesses legitimately differs: that is the point of the
+#: index).
+PARITY_FIELDS = ("ok", "evictions", "remat_ops", "ops_executed",
+                 "compute", "base_compute", "peak_memory", "slowdown")
+
+
+def verify_oracle_equivalence(log: Log, *, heuristics=SEPARABLE,
+                              fractions=DEFAULT_FRACTIONS,
+                              dealloc: str = "eager",
+                              budget_mode: str = "activation",
+                              thrash_factor: float = 50.0) -> dict:
+    """Index-vs-scan bit-exactness over a fraction × heuristic grid.
+
+    Budgets default to the activation range (``pinned + f * (peak -
+    pinned)``): captured serving traces pin their weights, so total-peak
+    fractions below the weight floor would make every cell trivially OOM.
+    Returns ``{"ok": bool, "cells": n, "mismatches": [...]}`` where each
+    mismatch names the cell and the first diverging field or victim.
+    """
+    peak, _ = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    mismatches = []
+    index_results: dict[tuple[str, float], RunResult] = {}
+    cells = 0
+    for h in heuristics:
+        for f in fractions:
+            cells += 1
+            budget = resolve_budget(f, peak, pinned, budget_mode)
+            scan_res, scan_victims = run_trace(
+                log, h, budget, dealloc=dealloc, index=False,
+                thrash_factor=thrash_factor)
+            idx_res, idx_victims = run_trace(
+                log, h, budget, dealloc=dealloc, index=True,
+                thrash_factor=thrash_factor)
+            idx_res.budget = f  # report as fraction (sweep convention)
+            index_results[(h, f)] = idx_res
+            bad = [fld for fld in PARITY_FIELDS
+                   if getattr(scan_res, fld) != getattr(idx_res, fld)]
+            if scan_victims != idx_victims:
+                div = next((i for i, (a, b) in
+                            enumerate(zip(scan_victims, idx_victims))
+                            if a != b), min(len(scan_victims),
+                                            len(idx_victims)))
+                bad.append(f"victims@{div}")
+            if bad:
+                mismatches.append({"heuristic": h, "fraction": f,
+                                   "fields": bad})
+    return {"ok": not mismatches, "cells": cells, "mismatches": mismatches,
+            "trace": log.name, "baseline_peak": peak,
+            "index_results": index_results}
+
+
+def replay_budget_curve(logs, *, heuristics=("h_dtr", "h_dtr_eq", "h_lru"),
+                        fractions=DEFAULT_FRACTIONS, dealloc: str = "eager",
+                        index: bool = True, processes: int | None = None,
+                        alloc_mode: str | None = None,
+                        budget_mode: str = "activation",
+                        thrash_factor: float = 50.0) -> list[dict]:
+    """Budget curves for captured traces via the parallel sweep driver.
+
+    One entry per (trace, heuristic): budget fraction -> slowdown / remat /
+    peak, plus the smallest non-thrashing budget (the number serving uses to
+    size per-replica memory).
+    """
+    logs = [logs] if isinstance(logs, Log) else list(logs)
+    sweeps = sweep_parallel(logs, list(heuristics), list(fractions),
+                            dealloc=dealloc, index=index,
+                            alloc_mode=alloc_mode, processes=processes,
+                            budget_mode=budget_mode,
+                            thrash_factor=thrash_factor)
+    out = []
+    for sw in sweeps:
+        out.append({
+            "trace": sw.log_name,
+            "heuristic": sw.heuristic,
+            "baseline_peak": sw.baseline_peak,
+            "min_feasible_fraction": min(
+                (r.budget for r in sw.runs if r.ok), default=None),
+            "last_ok_before_thrash": sw.last_ok_before_thrash(),
+            "runs": [asdict(r) for r in sw.runs],
+        })
+    return out
+
+
+def smallest_budget(log: Log, heuristic: str = "h_dtr_eq",
+                    fractions=DEFAULT_FRACTIONS,
+                    budget_mode: str = "activation") -> float | None:
+    """Smallest feasible budget fraction (serving memory sizing helper)."""
+    peak, _ = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    feasible = None
+    for f in sorted(fractions, reverse=True):
+        r = simulate(log, heuristic,
+                     resolve_budget(f, peak, pinned, budget_mode))
+        if r.ok:
+            feasible = f
+    return feasible

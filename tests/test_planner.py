@@ -99,7 +99,8 @@ def test_policy_actually_remats(setup):
             return jnp.mean(fwd(params, x) ** 2)
 
         c = jax.jit(jax.grad(loss)).lower(params, x).compile()
-        fa = c.cost_analysis()
+        from repro.analysis.hlo import xla_cost_dict
+        fa = xla_cost_dict(c.cost_analysis())
         return fa.get("flops", 0.0)
 
     f_save = compiled_flops(jax.checkpoint_policies.everything_saveable)

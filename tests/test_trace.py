@@ -1,0 +1,334 @@
+"""Tests for the trace subsystem: Log schema v2, recorder, capture, replay."""
+import json
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # hypothesis is optional: property tests skip, rest run
+    from _hypothesis_stub import given, settings, st  # noqa: F401
+
+from repro.core import graphs
+from repro.core.graph import (SCHEMA_VERSION, Alias, Call, Constant, Log,
+                              LogBuilder, Memory, Release, as_meta)
+from repro.core.simulator import (measure_baseline, resolve_budget, simulate,
+                                  sweep_parallel)
+
+
+# ---------------------------------------------------------------------------
+# Log schema v2: round-trip + versioning + malformed rejection
+# ---------------------------------------------------------------------------
+
+class TestLogSerialization:
+    def test_roundtrip_with_meta(self):
+        b = LogBuilder(name="t")
+        b.log.meta = {"source": "test", "slots": 2}
+        c = b.constant(64, meta={"rid": 0, "phase": "prefill"})
+        (o,) = b.call([c], [32], 2.5, "op",
+                      meta={"rid": 0, "slot": 1, "pos": 3})
+        b.release(o, meta={"phase": "retire"})
+        text = b.log.dumps()
+        log2 = Log.loads(text)
+        assert log2.name == "t"
+        assert log2.meta == {"source": "test", "slots": 2}
+        assert log2.instrs == b.log.instrs
+        calls = [i for i in log2.instrs if isinstance(i, Call)]
+        assert calls[0].meta == (("rid", 0), ("slot", 1), ("pos", 3))
+
+    def test_header_carries_version(self):
+        text = Log([Constant("a"), Memory("a", 4)], name="x").dumps()
+        head = json.loads(text.splitlines()[0])
+        assert head == {"kind": "LogHeader", "version": SCHEMA_VERSION,
+                        "name": "x"}
+
+    def test_loads_accepts_headerless_v1(self):
+        v1 = ('{"kind": "Constant", "t": "a"}\n'
+              '{"kind": "Memory", "t": "a", "size": 8}')
+        log = Log.loads(v1, name="old")
+        assert log.name == "old"
+        assert log.version == 1        # loaded version is preserved
+        assert log.instrs == [Constant("a"), Memory("a", 8)]
+
+    def test_explicit_name_overrides_header(self):
+        text = Log([], name="from_header").dumps()
+        assert Log.loads(text).name == "from_header"
+        assert Log.loads(text, name="override").name == "override"
+
+    def test_rejects_future_version(self):
+        with pytest.raises(ValueError, match="newer"):
+            Log.loads('{"kind": "LogHeader", "version": 99}')
+
+    def test_rejects_unknown_kind(self):
+        with pytest.raises(ValueError, match="unknown instruction"):
+            Log.loads('{"kind": "Frobnicate", "t": "a"}')
+
+    def test_rejects_bad_fields(self):
+        with pytest.raises(ValueError, match="bad fields"):
+            Log.loads('{"kind": "Constant", "nope": 1}')
+
+    def test_rejects_non_json_and_non_object(self):
+        with pytest.raises(ValueError, match="malformed"):
+            Log.loads("CONSTANT t0")
+        with pytest.raises(ValueError, match="malformed"):
+            Log.loads("[1, 2, 3]")
+
+    def test_as_meta_normalizes(self):
+        assert as_meta(None) == ()
+        assert as_meta({"a": 1}) == (("a", 1),)
+        assert as_meta([("b", "x")]) == (("b", "x"),)
+
+    @settings(max_examples=30, deadline=None)
+    @given(data=st.data())
+    def test_roundtrip_property(self, data):
+        """Random instruction streams survive dumps/loads bit-for-bit."""
+        names = st.text(
+            alphabet="abcdefgh0123456789_.", min_size=1, max_size=8)
+        metas = st.one_of(
+            st.just(()),
+            st.lists(st.tuples(names, st.one_of(
+                st.integers(-100, 100), names)),
+                max_size=3).map(lambda p: as_meta(p)))
+        instrs = []
+        made = data.draw(st.lists(names, min_size=1, max_size=12,
+                                  unique=True))
+        for i, t in enumerate(made):
+            m = data.draw(metas)
+            if i == 0 or data.draw(st.booleans()):
+                instrs.append(Constant(t, meta=m))
+                instrs.append(Memory(t, data.draw(st.integers(0, 2**40))))
+            else:
+                src = data.draw(st.sampled_from(made[:i]))
+                cost = data.draw(st.floats(
+                    0, 1e12, allow_nan=False, allow_infinity=False))
+                instrs.append(Call((src,), (t,), cost, f"op{i}", meta=m))
+                instrs.append(Memory(t, data.draw(st.integers(0, 2**30))))
+                instrs.append(Alias(t, None))
+            if data.draw(st.booleans()):
+                instrs.append(Release(t, meta=data.draw(metas)))
+        log = Log(instrs, name=data.draw(names),
+                  meta={"k": data.draw(st.integers(0, 10))})
+        log2 = Log.loads(log.dumps())
+        assert log2.instrs == log.instrs
+        assert log2.name == log.name
+        assert log2.meta == log.meta
+
+
+# ---------------------------------------------------------------------------
+# Eager TraceRecorder
+# ---------------------------------------------------------------------------
+
+class TestTraceRecorder:
+    def _capture_chain(self, budget=float("inf")):
+        jnp = pytest.importorskip("jax.numpy")
+        from repro.eager import DTRContext
+        from repro.trace import TraceRecorder
+        rec = TraceRecorder(name="chain")
+        ctx = DTRContext(budget_bytes=budget, use_wallclock_cost=False,
+                         recorder=rec)
+        x = ctx.wrap(jnp.ones(1024), name="x")
+        h = x
+        for i in range(6):
+            h = ctx.call(f"f{i}", lambda a: a * 1.5, [h])[0]
+        h.release()
+        return rec.finish(), ctx
+
+    def test_records_ops_constants_releases(self):
+        log, ctx = self._capture_chain()
+        assert log.op_count() == 6
+        consts = [i for i in log.instrs if isinstance(i, Constant)]
+        assert len(consts) == 1
+        rels = [i for i in log.instrs if isinstance(i, Release)]
+        assert len(rels) == 1
+        assert log.meta["source"] == "eager"
+
+    def test_remats_not_recorded(self):
+        """Evictions/remats under pressure must not pollute the stream."""
+        log_inf, _ = self._capture_chain()
+        log_tight, ctx = self._capture_chain(budget=3 * 4096)
+        assert ctx.rt.evictions > 0
+        assert log_tight.op_count() == log_inf.op_count()
+
+    def test_captured_log_replays(self):
+        log, ctx = self._capture_chain()
+        r = simulate(log, "h_dtr_eq", budget=float("inf"))
+        assert r.ok
+        assert r.ops_executed == 6
+
+    def test_release_via_context_dedupes(self):
+        from repro.trace import TraceRecorder
+        rec = TraceRecorder()
+        rec.on_constant(0, "c", 16)
+        rec.on_release(0)
+        rec.on_release(0)
+        rels = [i for i in rec.finish().instrs if isinstance(i, Release)]
+        assert len(rels) == 1
+
+
+# ---------------------------------------------------------------------------
+# Continuous-batching serve driver
+# ---------------------------------------------------------------------------
+
+def tiny_model():
+    from repro.trace import ServeStepModel
+    return ServeStepModel(weight_bytes=10_000, hidden_bytes=32,
+                          kv_token_bytes=64, decode_cost=100.0,
+                          attn_token_cost=2.0, prefill_token_cost=100.0)
+
+
+class TestServeDriver:
+    def test_deterministic(self):
+        from repro.trace import capture_serve_trace
+        a = capture_serve_trace(tiny_model(), slots=3, requests=7, gen=5,
+                                seed=3)
+        b = capture_serve_trace(tiny_model(), slots=3, requests=7, gen=5,
+                                seed=3)
+        assert a.dumps() == b.dumps()
+        c = capture_serve_trace(tiny_model(), slots=3, requests=7, gen=5,
+                                seed=4)
+        assert a.dumps() != c.dumps()
+
+    def test_interleaved_lifetimes(self):
+        """Requests retire while neighbors are mid-flight (continuous
+        batching), which no synthetic builder in core.graphs produces."""
+        from repro.trace import capture_serve_trace
+        log = capture_serve_trace(tiny_model(), slots=2, requests=5, gen=4,
+                                  seed=0)
+        retire_meta = [dict(i.meta) for i in log.instrs
+                       if isinstance(i, Release) and
+                       dict(i.meta).get("phase") == "retire"]
+        assert len(retire_meta) == 5
+        decodes = [dict(i.meta) for i in log.instrs
+                   if isinstance(i, Call) and
+                   dict(i.meta).get("phase") == "decode"]
+        first_retire = next(
+            n for n, i in enumerate(log.instrs)
+            if isinstance(i, Release)
+            and dict(i.meta).get("phase") == "retire")
+        later_decodes = [
+            dict(i.meta) for i in log.instrs[first_retire:]
+            if isinstance(i, Call) and dict(i.meta).get("phase") == "decode"]
+        assert later_decodes, "a retire must interleave with live decodes"
+
+    def test_kv_chunking_bounds_storage_count(self):
+        from repro.trace import capture_serve_trace
+        log = capture_serve_trace(tiny_model(), slots=1, requests=1, gen=9,
+                                  prompt_min=4, prompt_max=4, seed=0,
+                                  kv_chunk=4)
+        # 13 positions at chunk 4 -> prefill page + sealed pages + partial.
+        calls = [i for i in log.instrs if isinstance(i, Call)]
+        assert all(len(c.inputs) <= 2 + 13 // 4 + 1 for c in calls)
+
+    def test_replays_under_pressure(self):
+        from repro.trace import capture_serve_trace
+        log = capture_serve_trace(tiny_model(), slots=2, requests=4, gen=6,
+                                  seed=0)
+        peak, _ = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        r = simulate(log, "h_dtr",
+                     resolve_budget(0.6, peak, pinned, "activation"))
+        assert r.ok and r.evictions > 0 and r.remat_ops > 0
+
+    def test_pinned_bytes(self):
+        from repro.trace import capture_serve_trace
+        log = capture_serve_trace(tiny_model(), slots=2, requests=3, gen=4,
+                                  seed=0)
+        assert log.pinned_bytes() == 10_000
+
+
+# ---------------------------------------------------------------------------
+# Activation-budget sweeps
+# ---------------------------------------------------------------------------
+
+class TestActivationBudget:
+    def test_resolve_budget(self):
+        assert resolve_budget(0.5, 100.0, 0.0, "peak") == 50.0
+        assert resolve_budget(0.5, 100.0, 60.0, "activation") == 80.0
+        with pytest.raises(ValueError):
+            resolve_budget(0.5, 100.0, 0.0, "nope")
+
+    def test_sweep_parallel_activation_mode(self):
+        from repro.trace import capture_serve_trace
+        log = capture_serve_trace(tiny_model(), slots=2, requests=3, gen=4,
+                                  seed=0)
+        peak, _ = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        (sw,) = sweep_parallel(log, "h_lru", [0.7], processes=0,
+                               budget_mode="activation")
+        direct = simulate(log, "h_lru",
+                          resolve_budget(0.7, peak, pinned, "activation"))
+        got = sw.runs[0]
+        assert (got.ok, got.evictions, got.compute) == (
+            direct.ok, direct.evictions, direct.compute)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr capture
+# ---------------------------------------------------------------------------
+
+class TestJaxprCapture:
+    def test_unit_and_flops_cost_models(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        from repro.trace import capture_jaxpr
+
+        def f(a, b):
+            return jnp.tanh(a @ b).sum()
+
+        a = jax.ShapeDtypeStruct((8, 16), jnp.float32)
+        b = jax.ShapeDtypeStruct((16, 4), jnp.float32)
+        unit = capture_jaxpr(f, a, b, cost_model="unit")
+        assert unit.baseline_cost() == unit.op_count()
+        flops = capture_jaxpr(f, a, b, cost_model="flops")
+        assert flops.baseline_cost() > unit.baseline_cost()
+        assert flops.meta["source"] == "jaxpr"
+
+    def test_scan_unroll_exposes_layers(self):
+        jax = pytest.importorskip("jax")
+        import jax.numpy as jnp
+        from repro.trace import capture_jaxpr
+
+        def stack(x):
+            def body(c, _):
+                return jnp.tanh(c) * 1.1, c.sum()
+            out, ys = jax.lax.scan(body, x, None, length=8)
+            return out, ys
+
+        x = jax.ShapeDtypeStruct((16,), jnp.float32)
+        rolled = capture_jaxpr(stack, x, cost_model="flops",
+                               unroll_scans=False)
+        unrolled = capture_jaxpr(stack, x, cost_model="flops",
+                                 unroll_scans=True)
+        assert unrolled.op_count() > rolled.op_count() + 8
+        r = simulate(unrolled, "h_dtr_eq", budget=float("inf"))
+        assert r.ok
+
+    def test_train_step_capture_replays(self):
+        pytest.importorskip("jax")
+        from repro.trace import capture_train_step
+        log = capture_train_step("qwen2-0.5b", smoke=True, batch=1, seq=4,
+                                 cost_model="flops")
+        assert log.op_count() > 100
+        r = simulate(log, "h_lru", budget=float("inf"))
+        assert r.ok
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+class TestCLI:
+    def test_capture_and_replay_roundtrip(self, tmp_path):
+        from repro.trace.__main__ import main
+        out = tmp_path / "dag.log"
+        assert main(["capture", "--source", "random-dag",
+                     "--out", str(out)]) == 0
+        assert main(["replay", str(out), "--heuristics", "h_lru",
+                     "--fractions", "0.8", "--processes", "0",
+                     "--thrash-factor", "3"]) == 0
+
+    def test_capture_verify_gate(self, tmp_path):
+        from repro.trace.__main__ import main
+        out = tmp_path / "dag.log"
+        assert main(["capture", "--source", "treelstm", "--out", str(out),
+                     "--verify", "--fractions", "0.8", "0.5",
+                     "--thrash-factor", "3"]) == 0

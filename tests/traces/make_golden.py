@@ -1,0 +1,87 @@
+"""Regenerate the golden-trace corpus + expected replay results.
+
+Run from the repo root after an *intentional* capture-format or engine
+change, then review the diff before committing:
+
+    PYTHONPATH=src python tests/traces/make_golden.py
+
+Traces come from three capture sources (see README "Tracing real
+workloads"): the continuous-batching serve driver at two slot widths, a
+jaxpr-captured train step, the eager executor (MLP training loop), and two
+synthetic families (treelstm, random_dag).  ``expected.json`` pins, for a
+small heuristic × budget grid per trace, the full victim sequence digest and
+the replay counters — any engine change that alters a single eviction
+decision shows up as a diff here.
+"""
+import hashlib
+import json
+import os
+import sys
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+from repro.core import graphs  # noqa: E402
+from repro.core.simulator import measure_baseline, resolve_budget  # noqa: E402
+from repro.trace import (capture_eager_mlp, capture_serve_trace,  # noqa: E402
+                         capture_train_step, run_trace,
+                         step_model_from_config)
+
+EXPECT_GRID = [("h_dtr", 0.8), ("h_dtr_eq", 0.8), ("h_lru", 0.8),
+               ("h_msps", 0.5), ("h_size", 0.5), ("h_dtr_local", 0.5)]
+THRASH = 3.0   # golden replays abort fast; thrash cells are still asserted
+
+
+def build_traces():
+    model = step_model_from_config("qwen2-0.5b", smoke=True)
+    return {
+        "serve_smoke_s2": capture_serve_trace(
+            model, slots=2, requests=6, gen=8, seed=0,
+            name="serve_smoke_s2"),
+        "serve_smoke_s4": capture_serve_trace(
+            model, slots=4, requests=10, gen=8, seed=0,
+            name="serve_smoke_s4"),
+        "train_smoke": capture_train_step(
+            "qwen2-0.5b", smoke=True, batch=2, seq=16, cost_model="flops"),
+        "eager_mlp": capture_eager_mlp(),
+        "treelstm": graphs.treelstm(depth=4, width=32, seed=0),
+        "random_dag": graphs.random_dag(150, seed=0),
+    }
+
+
+def expected_for(log):
+    peak, _ = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    cells = {}
+    for h, f in EXPECT_GRID:
+        budget = resolve_budget(f, peak, pinned, "activation")
+        res, victims = run_trace(log, h, budget, index=True,
+                                 thrash_factor=THRASH)
+        cells[f"{h}@{f}"] = {
+            "ok": res.ok,
+            "evictions": res.evictions,
+            "remat_ops": res.remat_ops,
+            "ops_executed": res.ops_executed,
+            "compute": repr(res.compute),
+            "peak_memory": repr(res.peak_memory),
+            "victims_sha1": hashlib.sha1(
+                ",".join(map(str, victims)).encode()).hexdigest(),
+            "n_victims": len(victims),
+        }
+    return {"baseline_peak": repr(peak), "pinned": pinned, "cells": cells}
+
+
+def main():
+    expected = {}
+    for name, log in sorted(build_traces().items()):
+        path = os.path.join(HERE, f"{name}.log")
+        with open(path, "w") as f:
+            f.write(log.dumps() + "\n")
+        expected[name] = expected_for(log)
+        print(f"{name}: {log.op_count()} ops -> {path}")
+    with open(os.path.join(HERE, "expected.json"), "w") as f:
+        json.dump(expected, f, indent=1, sort_keys=True)
+    print(f"expected.json: {len(expected)} traces x {len(EXPECT_GRID)} cells")
+
+
+if __name__ == "__main__":
+    sys.exit(main())
