@@ -1,42 +1,60 @@
 """Victim-selection performance benchmark (the eviction-index trajectory).
 
 Measures, for each workload x heuristic, the wall-clock spent *inside*
-``DTRRuntime._pick_victim`` (victim selection only), total run wall-clock,
-``meta_accesses``, and evictions/sec — once with the incremental eviction
-index (``index=True``, the default) and once with the exhaustive
-linear-scan oracle (``index=False``).  Both runs are asserted bit-exact
-(same evictions / compute / peak) before any ratio is reported, so a
-speedup can never come from making different decisions.
+``DTRRuntime._pick_victim`` (victim selection only), the wall-clock of the
+index's key flush (``EvictIndex._flush_dirty`` — the eq-path hotspot),
+total run wall-clock, ``meta_accesses``, subscriber registrations per
+victim pick, and evictions/sec — once with the incremental eviction index
+(``index=True``, the default) and once with the exhaustive linear-scan
+oracle (``index=False``).  Both runs are asserted bit-exact (same
+evictions / compute / peak) before any ratio is reported, so a speedup can
+never come from making different decisions.
 
 Workloads: N-op linear chains (the App. A.1 family; the 1000-op chain at
-budget fraction 0.3 is the headline configuration) plus the
-resnet / unet / transformer / treelstm model logs.
+budget fraction 0.3 is the headline configuration), the
+resnet / unet / transformer / treelstm model logs, and the golden captured
+train-step trace (``tests/traces/train_smoke.log``, activation-mode
+budget) — the real workload whose e*-walk subscriber growth and eq flush
+cost this file gates.
 
 Emits ``BENCH_runtime.json``::
 
     {"headline": {...},            # chain-1000 @ 0.3 summary per heuristic
-     "rows": [...],                # every measured cell
+     "rows": [...],                # every measured cell (incl. flush_s,
+                                   # subscribes, subs_per_pick columns)
+     "train_trace": [...],         # the captured-trace cells
      "equivalence_failures": 0}
 
 ``--smoke`` runs a reduced grid (fast enough for CI) and exits nonzero on
-any oracle-equivalence mismatch.
+any oracle-equivalence mismatch *or* when subscribes-per-pick on the
+captured train trace exceeds the pinned ceilings (the e*-walk-growth
+regression gate).
 """
 from __future__ import annotations
 
 import json
+import os
 import time
 
 from repro.core import graphs, simulator
-from repro.core.graph import replay
+from repro.core.graph import Log, replay
 from repro.core.heuristics import by_name
 from repro.core.runtime import DTRRuntime, OOMError, ThrashError
 
 PARITY_FIELDS = ("evictions", "total_compute", "base_compute", "remat_ops",
                  "ops_executed", "peak_memory")
 
+TRAIN_TRACE = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           os.pardir, "tests", "traces", "train_smoke.log")
+#: subscribes-per-pick ceilings on the golden train trace @ 0.9 activation
+#: budget (measured 3385.3 / 12.7 post-fix; the pre-fix engine sat at
+#: ~3751 for h_dtr and ~33 for h_dtr_eq) — the walk-cost bug regressing
+#: fails the smoke gate.
+SUBS_PER_PICK_CEILING = {"h_dtr": 3600.0, "h_dtr_eq": 25.0}
+
 
 def _timed_run(log, heuristic, budget, index, thrash_factor=50.0):
-    """One replay; returns (run_wall_s, pick_wall_s, runtime)."""
+    """One replay; returns wall/pick/flush timings + the runtime."""
     rt = DTRRuntime(budget=budget, heuristic=by_name(heuristic),
                     compute_limit=thrash_factor * log.baseline_cost(),
                     index=index)
@@ -50,6 +68,16 @@ def _timed_run(log, heuristic, budget, index, thrash_factor=50.0):
         return victim
 
     rt._pick_victim = timed_pick
+    flush_time = [0.0]
+    if rt.index is not None:
+        inner_flush = rt.index._flush_dirty
+
+        def timed_flush():
+            t0 = time.perf_counter()
+            inner_flush()
+            flush_time[0] += time.perf_counter() - t0
+
+        rt.index._flush_dirty = timed_flush
     t0 = time.perf_counter()
     ok, err = True, ""
     try:
@@ -57,26 +85,39 @@ def _timed_run(log, heuristic, budget, index, thrash_factor=50.0):
     except (OOMError, ThrashError) as e:
         ok, err = False, str(e)
     return dict(wall_s=time.perf_counter() - t0, pick_s=pick_time[0],
-                ok=ok, error=err, rt=rt)
+                flush_s=flush_time[0], ok=ok, error=err, rt=rt)
 
 
-def bench_cell(log, name, heuristic, frac, peak, rows):
-    """Measure oracle vs index on one (log, heuristic, frac) cell."""
-    oracle = _timed_run(log, heuristic, frac * peak, index=False)
-    indexed = _timed_run(log, heuristic, frac * peak, index=True)
+def bench_cell(log, name, heuristic, frac, peak, rows, budget=None):
+    """Measure oracle vs index on one (log, heuristic, frac) cell.
+
+    ``budget`` overrides the default ``frac * peak`` (captured traces use
+    activation-mode budgets resolved by the caller; ``frac`` stays the
+    reported label either way).
+    """
+    budget = frac * peak if budget is None else budget
+    oracle = _timed_run(log, heuristic, budget, index=False)
+    indexed = _timed_run(log, heuristic, budget, index=True)
     mismatches = [f for f in PARITY_FIELDS
                   if getattr(oracle["rt"], f) != getattr(indexed["rt"], f)]
     if oracle["ok"] != indexed["ok"]:
         mismatches.append("ok")
     for mode, run in (("scan", oracle), ("index", indexed)):
         rt = run["rt"]
+        idx = rt.index
         rows.append(dict(
             log=name, n_ops=log.op_count(), heuristic=heuristic,
             budget=frac, mode=mode, ok=run["ok"],
             wall_s=round(run["wall_s"], 6), pick_s=round(run["pick_s"], 6),
+            flush_s=round(run["flush_s"], 6),
             meta_accesses=rt.meta_accesses
             + (rt.uf.accesses if rt.uf else 0),
             evictions=rt.evictions,
+            picks=rt.victim_picks,
+            subscribes=rt._invalidator.subscribes,
+            subs_per_pick=round(rt._invalidator.subscribes
+                                / max(rt.victim_picks, 1), 1),
+            key_recomputes=idx.key_recomputes if idx is not None else 0,
             evictions_per_s=round(rt.evictions / max(run["wall_s"], 1e-9)),
             error=run["error"]))
     def _meta(rt):
@@ -91,7 +132,22 @@ def bench_cell(log, name, heuristic, frac, peak, rows):
         wall_speedup=round(oracle["wall_s"] / max(indexed["wall_s"], 1e-9), 2),
         meta_reduction=round(
             _meta(oracle["rt"]) / max(_meta(indexed["rt"]), 1), 2),
+        flush_s=round(indexed["flush_s"], 6),
+        subs_per_pick=round(
+            indexed["rt"]._invalidator.subscribes
+            / max(indexed["rt"].victim_picks, 1), 1),
         equivalent=not mismatches, mismatched_fields=mismatches)
+
+
+def bench_train_trace(rows, heuristics=("h_dtr", "h_dtr_eq"), frac=0.9):
+    """Cells for the golden captured train trace (activation budget)."""
+    with open(TRAIN_TRACE) as f:
+        log = Log.loads(f.read())
+    peak, _ = simulator.measure_baseline(log)
+    budget = simulator.resolve_budget(frac, peak, log.pinned_bytes(),
+                                      "activation")
+    return [bench_cell(log, "train839", h, frac, peak, rows, budget=budget)
+            for h in heuristics]
 
 
 def run(smoke=False):
@@ -127,6 +183,8 @@ def run(smoke=False):
         peak, _ = simulator.measure_baseline(log)
         for h in heuristics[:3] if not smoke else heuristics:
             summaries.append(bench_cell(log, mname, h, 0.5, peak, rows))
+    train_cells = bench_train_trace(rows)
+    summaries.extend(train_cells)
 
     headline = {
         s["heuristic"]: dict(pick_speedup=s["pick_speedup"],
@@ -136,8 +194,17 @@ def run(smoke=False):
         for s in summaries
         if s["log"] == f"chain{headline_chain}" and s["budget"] == fracs[0]}
     failures = [s for s in summaries if not s["equivalent"]]
+    subs_violations = [
+        dict(heuristic=s["heuristic"], subs_per_pick=s["subs_per_pick"],
+             ceiling=SUBS_PER_PICK_CEILING[s["heuristic"]])
+        for s in train_cells
+        if s["subs_per_pick"] > SUBS_PER_PICK_CEILING.get(
+            s["heuristic"], float("inf"))]
     return dict(headline_chain=f"chain{headline_chain}@{fracs[0]}",
                 headline=headline, summaries=summaries, rows=rows,
+                train_trace=train_cells,
+                subs_per_pick_ceiling=SUBS_PER_PICK_CEILING,
+                subs_ceiling_violations=subs_violations,
                 equivalence_failures=len(failures))
 
 
@@ -161,9 +228,19 @@ def main(argv=()):
         print(f"FAIL: {report['equivalence_failures']} cell(s) broke "
               f"oracle equivalence")
         return 1
+    if report["subs_ceiling_violations"]:
+        for v in report["subs_ceiling_violations"]:
+            print(f"FAIL: train839 {v['heuristic']} subscribes-per-pick "
+                  f"{v['subs_per_pick']} over ceiling {v['ceiling']} "
+                  f"(e*-walk growth regression)")
+        return 1
     print(f"headline ({report['headline_chain']}): "
           + " ".join(f"{h}={v['pick_speedup']}x"
                      for h, v in sorted(report["headline"].items())))
+    print("train839 (@0.9 activation): "
+          + " ".join(f"{s['heuristic']}: subs/pick={s['subs_per_pick']} "
+                     f"flush_s={s['flush_s']}"
+                     for s in report["train_trace"]))
     return 0
 
 

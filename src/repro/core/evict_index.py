@@ -102,9 +102,25 @@ class ScopedInvalidator:
 
     The runtime calls :meth:`subscribe` while walking a closure ("the value
     cached for ``consumer`` summed over evicted storage ``dep``") and the
-    event hooks on state transitions; invalidation drops exactly the cache
-    entries subscribed to the affected components plus the resident
-    neighbors of the transitioning storage.
+    event hooks on state transitions.  Invalidation distinguishes two
+    classes per affected consumer:
+
+    * **full** — the consumer's *adjacency* changed (a neighbor entered or
+      left the evicted set): both the cached value and the ẽ* adjacency
+      snapshot (``rt._eq_adj``) are dropped, forcing a neighborhood
+      re-walk (which re-subscribes);
+    * **sum-only** — only an adjacent component's *sum* changed (a merge,
+      split, or member cost growth elsewhere in the component): the value
+      is dropped but the snapshot survives, so the eq key rebuilds from
+      the union-find's incrementally-maintained per-root sums in O(roots)
+      — and the consumer stays subscribed to the (possibly merged)
+      component.
+
+    Exact e* closures (``_estar_cache``) cannot be rebuilt from component
+    sums, so both classes drop them; their consumers re-subscribe on the
+    next walk.  Dead storages (``StorageRec.dead``) are pruned: they never
+    receive epoch nodes, never merge, and their eviction fires no
+    neighborhood invalidation at all (:meth:`on_dead_evict`).
     """
 
     def __init__(self, rt) -> None:
@@ -113,6 +129,7 @@ class ScopedInvalidator:
         self._node: dict[int, int] = {}       # sid -> current epoch node
         self._subs: dict[int, set[int]] = {}  # root -> subscriber sids
         self.invalidations = 0                # telemetry: entries dropped
+        self.subscribes = 0                   # telemetry: registrations
 
     # -- closure bookkeeping -------------------------------------------
     def _node_of(self, sid: int) -> int:
@@ -123,6 +140,7 @@ class ScopedInvalidator:
         return n
 
     def subscribe(self, dep_sid: int, consumer_sid: int) -> None:
+        self.subscribes += 1
         root = self._uf.find(self._node_of(dep_sid))
         subs = self._subs.get(root)
         if subs is None:
@@ -136,46 +154,113 @@ class ScopedInvalidator:
 
         Gives ``s`` a fresh epoch node, merges it with the components of
         its evicted neighbors, and invalidates (a) the subscribers of every
-        merged component — their closures can now extend through ``s`` —
-        and (b) the resident neighbors of ``s``, whose closures gain ``s``
-        itself.
+        merged component — their closures can now extend through ``s``
+        (sum-only for eq consumers: their adjacency is unchanged) — and
+        (b) the resident neighbors of ``s``, whose closures gain ``s``
+        itself (full: their adjacency grew).
         """
         rt = self.rt
         node = self._uf.make()
         self._node[s.sid] = node
-        dirty: set[int] = {s.sid}
+        full: set[int] = {s.sid}
+        moved: set[int] = set()
         for nsid in s.deps | s.children:
             ns = rt.storages.get(nsid)
-            if ns is None or ns.banished:
+            if ns is None or ns.banished or (ns.dead and rt.uf is None):
+                # Without a cost union-find, dead storages are fully
+                # pruned; with one they are ẽ* component members whose
+                # epoch components must keep mirroring the cost ones.
                 continue
             if ns.resident:
-                dirty.add(nsid)
+                full.add(nsid)
             else:
                 r = self._uf.find(self._node_of(nsid))
-                dirty |= self._subs.pop(r, set())
+                sub = self._subs.pop(r, None)
+                if sub:
+                    moved |= sub
                 node = self._uf.union(node, r)
-        self._invalidate(dirty)
+        self._invalidate_full(full)
+        self._invalidate_sum(moved - full)
+        # Consumers whose adjacency snapshot survived stay subscribed to
+        # the merged component (their remembered handles keep resolving to
+        # its root); the rest re-subscribe on their next walk.
+        adj = rt._eq_adj
+        keep = {c for c in moved if c in adj}
+        if keep:
+            root = self._uf.find(node)
+            cur = self._subs.get(root)
+            if cur is None:
+                self._subs[root] = keep
+            else:
+                cur |= keep
 
     def on_unevict(self, s) -> None:
         """``s`` left the evicted set (rematerialized or banished).
 
-        Every cached value that summed over ``s``'s component is stale;
-        the component may also split, which the union-find approximates by
-        leaving phantom members behind (over-invalidation only).
+        Every cached value that summed over ``s``'s component is stale.
+        Subscribers *adjacent* to ``s`` lose it from their neighborhood —
+        adjacency changed, so their ẽ* snapshots are dropped too (the
+        component-split case the snapshot cannot express).  The remaining
+        subscribers see only the component sum shrink (split_approx):
+        sum-only, snapshots and subscriptions intact.
         """
+        rt = self.rt
         node = self._node.get(s.sid)
-        dirty: set[int] = {s.sid}
-        if node is not None:
-            r = self._uf.find(node)
-            dirty |= self._subs.pop(r, set())
-        self._invalidate(dirty)
+        subs = self._subs.get(self._uf.find(node)) if node is not None \
+            else None
+        full: set[int] = {s.sid}
+        if subs:
+            for nsid in s.deps | s.children:
+                if nsid in subs:
+                    full.add(nsid)
+            self._invalidate_sum(subs - full)
+            subs -= full
+            # Estar-only consumers re-subscribe on their next walk; keep
+            # only live snapshot holders subscribed.
+            adj = rt._eq_adj
+            stale = [c for c in subs if c not in adj]
+            subs.difference_update(stale)
+        self._invalidate_full(full)
+
+    #: Death of an evicted storage splits it out of its component exactly
+    #: like a rematerialization (the runtime detaches its union-find handle
+    #: and subtracts its cost right after this hook).
+    on_death = on_unevict
+
+    def on_dead_evict(self, s) -> None:
+        """A dead storage left residency: neighbors' closures never
+        included it and never will — only its own consumer entries go."""
+        self._invalidate_full({s.sid})
 
     def on_cost_change(self, s) -> None:
         """``s.local_cost`` grew (alias registration) while ``s`` evicted:
-        cached closures summing over ``s`` hold the old cost."""
-        self.on_unevict(s)
+        cached closures summing over ``s`` hold the old cost.  Adjacency is
+        unchanged for every subscriber, so the drop is sum-only (the
+        runtime has already added the delta to the component sum)."""
+        node = self._node.get(s.sid)
+        sum_only: set[int] = set()
+        if node is not None:
+            sum_only |= self._subs.get(self._uf.find(node), set())
+        sum_only.discard(s.sid)
+        self._invalidate_full({s.sid})
+        self._invalidate_sum(sum_only)
 
-    def _invalidate(self, sids: set[int]) -> None:
+    def _invalidate_full(self, sids: set[int]) -> None:
+        """Adjacency changed: drop values *and* ẽ* adjacency snapshots."""
+        rt = self.rt
+        estar, eq, adj = rt._estar_cache, rt._eq_cache, rt._eq_adj
+        idx = rt.index
+        self.invalidations += len(sids)
+        for sid in sids:
+            estar.pop(sid, None)
+            eq.pop(sid, None)
+            adj.pop(sid, None)
+            if idx is not None:
+                idx.mark_dirty(sid)
+
+    def _invalidate_sum(self, sids: set[int]) -> None:
+        """Component sums changed, adjacency intact: drop values, keep the
+        ẽ* snapshots (eq keys rebuild via the per-root-sum fast path)."""
         rt = self.rt
         estar, eq = rt._estar_cache, rt._eq_cache
         idx = rt.index

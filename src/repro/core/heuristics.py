@@ -60,27 +60,43 @@ class Heuristic:
 
 
 class HDTR(Heuristic):
-    """Full h_DTR with exact evicted neighborhood e*."""
+    """Full h_DTR with exact evicted neighborhood e*.
+
+    The numerator charges the storage's own compute, the aggregate cost of
+    dead subgraphs attached to it (``dead_cost`` — evicted cones the e*
+    walk no longer traverses member-by-member), and the live evicted
+    neighborhood.
+    """
     name = "h_dtr"
     separable = True
     uses_staleness = True
 
     def score(self, rt, s) -> float:
-        c = s.local_cost + rt.evicted_neighborhood_cost(s)
+        c = s.local_cost + s.dead_cost + rt.evicted_neighborhood_cost(s)
         return c / (s.size * rt.staleness(s))
 
     def key(self, rt, s) -> float:
-        return (s.local_cost + rt.evicted_neighborhood_cost(s)) / s.size
+        return (s.local_cost + s.dead_cost
+                + rt.evicted_neighborhood_cost(s)) / s.size
 
 
 class HDTREq(Heuristic):
-    """h_DTR^eq: union-find ẽ* with the splitting approximation."""
+    """h_DTR^eq: union-find ẽ* with the splitting approximation.
+
+    ``key()`` reads the cached per-root component sums maintained
+    incrementally by the union-find (via ``eq_neighborhood_cost``'s
+    snapshot fast path) — no neighborhood re-walk per recomputation.
+    """
     name = "h_dtr_eq"
     needs_uf = True
     separable = True
     uses_staleness = True
 
     def score(self, rt, s) -> float:
+        # No ``dead_cost`` term here: dead storages are *members* of the
+        # equivalence classes, so their compute already sits in the
+        # component sums ẽ* reads (the exact walk instead prunes them and
+        # charges the attached cones).
         c = s.local_cost + rt.eq_neighborhood_cost(s)
         return c / (s.size * rt.staleness(s))
 
@@ -158,7 +174,8 @@ class HEStar(Heuristic):
     separable = True
 
     def score(self, rt, s) -> float:
-        return (s.local_cost + rt.evicted_neighborhood_cost(s)) / max(s.size, 1)
+        return (s.local_cost + s.dead_cost
+                + rt.evicted_neighborhood_cost(s)) / max(s.size, 1)
 
     def key(self, rt, s) -> float:
         return self.score(rt, s)
@@ -184,7 +201,8 @@ class HAblation(Heuristic):
 
     def _numer(self, rt, s) -> float:
         if self.cost == "estar":
-            return s.local_cost + rt.evicted_neighborhood_cost(s)
+            return (s.local_cost + s.dead_cost
+                    + rt.evicted_neighborhood_cost(s))
         if self.cost == "eq":
             return s.local_cost + rt.eq_neighborhood_cost(s)
         if self.cost == "local":

@@ -83,11 +83,19 @@ class StorageRec:
     pinned: bool = False            # constant or banish-pinned: unevictable
     banished: bool = False
     constant: bool = False
+    dead: bool = False              # no refs + every child dead/banished:
+    #                                 never rematerialized again (pruned
+    #                                 from evicted components and e* walks)
+    dead_cost: float = 0.0          # aggregated cost of dead subgraphs
+    #                                 attached to this (live) storage: e*
+    #                                 walks charge it in O(1) instead of
+    #                                 traversing the dead cone
     last_access: float = 0.0
     local_cost: float = 0.0         # cached cost(S) = sum of view op costs
     deps: set[int] = field(default_factory=set)       # parent storages
     children: set[int] = field(default_factory=set)   # dependent storages
     uf: int = -1                    # union-find handle (h_eq heuristics)
+    uf_joined: bool = False         # local_cost currently counted in uf sum
     refs: int = 0                   # cached sum of view refs
 
     # Eviction-index backref (class attr so dataclass __init__ writes are
@@ -152,14 +160,28 @@ class DTRRuntime:
         self.remat_ops = 0
         self.evictions = 0
         self.meta_accesses = 0          # Appendix D.3 accounting
+        self.victim_picks = 0           # victim selections (flush events)
         self._pending_banish: set[int] = set()
         # Scoped caches for neighborhood costs: entries are dropped by the
         # ScopedInvalidator when (and only when) their evicted component
         # changes — no global version nuke (App. C.5 overhead fix).
         self._estar_cache: dict[int, tuple[float, int]] = {}  # sid->(cost, n)
         self._eq_cache: dict[int, float] = {}
+        # ẽ* adjacency snapshots: sid -> union-find handles of its evicted
+        # neighbors at last full walk.  Survives component-sum-only events,
+        # so an invalidated eq key rebuilds from the incrementally-
+        # maintained per-root sums without re-walking the neighborhood.
+        self._eq_adj: dict[int, tuple[int, ...]] = {}
 
         self.uf = CostUnionFind() if getattr(heuristic, "needs_uf", False) else None
+        # Evicted-component bookkeeping for amortized-exact splits: member
+        # sids and detached-phantom counts per component root.  When half a
+        # component is phantoms, its true partition is re-derived
+        # (``_uf_rebuild``) — bounding the over-merge drift of the paper's
+        # splitting approximation to 2x instead of letting ẽ* balloon
+        # without bound on eager-release workloads.
+        self._uf_members: dict[int, list[int]] = {}
+        self._uf_phantoms: dict[int, int] = {}
         if hasattr(heuristic, "bind"):
             heuristic.bind(self)
 
@@ -229,9 +251,21 @@ class DTRRuntime:
                 t = TensorRec(tid, nm, op, sid, is_alias=True, defined=False)
                 s = self.storages[sid]
                 s.tensor_tids.append(tid)
+                was_dead = s.dead
                 s.local_cost += op.cost
                 s.refs += 1
-                if not s.resident and not s.banished:
+                if self.uf is not None and s.uf_joined:
+                    # The component sum tracks member costs incrementally:
+                    # the view's cost joins it now, so the later
+                    # split_approx subtraction balances.  (Checked before
+                    # the revive below — dead evicted members stay joined,
+                    # and _revive would skip the re-join for them.)
+                    self.uf.add_cost(s.uf, op.cost)
+                if was_dead:
+                    # A new external view revives a pruned storage: it
+                    # rejoins the evicted components with its grown cost.
+                    self._revive(s)
+                elif not s.resident and not s.banished:
                     # Cached closures summing this evicted storage hold the
                     # pre-view cost: drop them (scoped to its component).
                     self._invalidator.on_cost_change(s)
@@ -289,7 +323,10 @@ class DTRRuntime:
     def addref(self, tid: int) -> None:
         t = self.tensors[tid]
         t.refs += 1
-        self.storages[t.sid].refs += 1
+        s = self.storages[t.sid]
+        s.refs += 1
+        if s.dead:
+            self._revive(s)
 
     def release(self, tid: int) -> None:
         """External reference dropped (RELEASE in the log)."""
@@ -297,6 +334,10 @@ class DTRRuntime:
         t.refs -= 1
         s = self.storages[t.sid]
         s.refs -= 1
+        if s.refs <= 0:
+            # Dead-subgraph pruning happens *before* the eager evict below,
+            # so a storage dying at release never joins evicted components.
+            self._maybe_die(s)
         if s.refs > 0 or s.banished:
             return
         if self.dealloc == "ignore":
@@ -531,6 +572,7 @@ class DTRRuntime:
         return pool
 
     def _pick_victim(self, exclude: set[int]) -> Optional[StorageRec]:
+        self.victim_picks += 1
         if self.index is not None:
             return self.index.pick(exclude)
         # Reference oracle: exhaustive linear scan (kept bit-exact; the
@@ -551,35 +593,278 @@ class DTRRuntime:
             self.tensors[tid].defined = False
         self.memory -= s.size
         self.evictions += 1
-        # Scoped invalidation: drop cached neighborhood costs only in the
-        # components this eviction merges / the storages adjacent to it.
-        self._invalidator.on_evict(s)
+        if s.dead and self.uf is None:
+            # Dead-subgraph pruning: a never-again-rematerializable storage
+            # must not subscribe or inflate the e* walks — its departure
+            # leaves every neighbor's cached closure intact (the exact
+            # walk charges its cone through ``dead_cost`` instead).
+            self._invalidator.on_dead_evict(s)
+        else:
+            # Scoped invalidation: drop cached neighborhood costs only in
+            # the components this eviction merges / the storages adjacent
+            # to it.  (With a cost union-find attached, dead storages do
+            # join the ẽ* equivalence classes — see ``_uf_join``.)
+            self._invalidator.on_evict(s)
         if self.allocator is not None:
             self.allocator.free(s)
         if self.free_fn is not None:
             self.free_fn(s)
         if self.uf is not None:
-            # Merge with evicted neighbor components; add own cost (App. C.2).
-            self.uf.add_cost(s.uf, s.local_cost)
-            for nsid in s.deps | s.children:
-                ns = self.storages[nsid]
-                if not ns.resident and not ns.banished:
-                    s.uf = self.uf.union(s.uf, ns.uf)
-                    self.meta_accesses += 1
+            self._uf_join(s)
 
     def _on_remat(self, s: StorageRec) -> None:
         # (ScopedInvalidator.on_unevict already ran in _perform, before the
         # union-find split below mutates the component cost sums.)
         if self.uf is not None:
-            s.uf = self.uf.split_approx(s.uf, s.local_cost)
-            self.meta_accesses += 1
+            self._uf_detach(s)
+
+    # ------------------------------------------------------------------
+    # Evicted-component maintenance (h_dtr_eq's equivalence classes)
+    # ------------------------------------------------------------------
+    def _uf_join(self, s: StorageRec) -> None:
+        """``s`` enters the evicted set: merge with evicted neighbor
+        components, adding its own cost (App. C.2).
+
+        Dead storages join too: the ẽ* equivalence classes count every
+        evicted tensor's compute exactly once *as a member* (the exact
+        walk instead prunes the dead and charges their cones through
+        ``dead_cost`` — two self-consistent accountings of the same
+        quantity).  Pruning the dead out of the *components* was measured
+        to invert eq's economics on fan-out traces: the undirected
+        approximation relies on their ballast, so they stay.
+        """
+        uf = self.uf
+        members = self._uf_members
+        phantoms = self._uf_phantoms
+        uf.add_cost(s.uf, s.local_cost)
+        s.uf_joined = True
+        r = uf.find(s.uf)
+        mem = members.pop(r, None)
+        ph = phantoms.pop(r, 0)
+        if mem is None:
+            mem = [s.sid]
+        else:
+            mem.append(s.sid)
+        for nsid in s.deps | s.children:
+            ns = self.storages[nsid]
+            if not ns.resident and not ns.banished:
+                r1 = uf.find(ns.uf)
+                if r1 == r:
+                    continue
+                mem1 = members.pop(r1, None)
+                ph += phantoms.pop(r1, 0)
+                if mem1 is not None:
+                    mem.extend(mem1)
+                r = uf.union(r, r1)
+                self.meta_accesses += 1
+        members[r] = mem
+        if ph:
+            phantoms[r] = ph
+
+    def _uf_detach(self, s: StorageRec) -> None:
+        """``s`` leaves the evicted set (remat / death): the paper's split
+        approximation — subtract its cost, move it to a fresh singleton —
+        plus amortized *exact* splitting.
+
+        The detached member lingers as a phantom inside the old component.
+        On static workloads phantoms are short-lived; on eager-release
+        traces they accumulate until ẽ* is pure noise (a single
+        mega-component whose sum approaches total trace compute).  So each
+        detach bumps the component's phantom count, and once phantoms
+        outnumber live members the true partition is re-derived — ẽ*
+        tracks e* within a bounded (2x-membership) slack instead of
+        diverging with trace length.  (A storage that never joined — the
+        created-unmaterialized "ephemeral" case — still detaches to a
+        fresh singleton so a later re-eviction merges with its *current*
+        neighbors.)
+        """
+        uf = self.uf
+        r = uf.find(s.uf)
+        own = s.local_cost if s.uf_joined else 0.0
+        joined = s.uf_joined
+        s.uf_joined = False
+        s.uf = uf.split_approx(s.uf, own)
+        self.meta_accesses += 1
+        if not joined:
+            return
+        mem = self._uf_members.get(r)
+        if mem is None:
+            return
+        ph = self._uf_phantoms.get(r, 0) + 1
+        if 2 * ph >= len(mem):
+            self._uf_rebuild(r)
+        else:
+            self._uf_phantoms[r] = ph
+
+    def _uf_rebuild(self, root: int) -> None:
+        """Re-derive the exact evicted components of a phantom-heavy one.
+
+        Walks the live members' evicted adjacency, assigns each connected
+        component a fresh root with an exactly re-summed cost, and
+        re-parents every live member's handle — so adjacency snapshots
+        held by eq consumers keep resolving (their values were already
+        invalidated by the event that triggered the detach).  Stale
+        handles of long-gone phantoms may resolve to an arbitrary
+        successor component; no live snapshot can hold one (any consumer
+        adjacent to a detaching storage is fully invalidated at that
+        event).
+        """
+        uf = self.uf
+        storages = self.storages
+        mem = self._uf_members.pop(root)
+        self._uf_phantoms.pop(root, None)
+        live = [sid for sid in mem
+                if storages[sid].uf_joined
+                and uf.find(storages[sid].uf) == root]
+        uf.accesses += len(mem)
+        seen: set[int] = set()
+        live_set = set(live)
+        first_root = None
+        for sid in live:
+            if sid in seen:
+                continue
+            comp = [sid]
+            seen.add(sid)
+            stack = [sid]
+            while stack:
+                y = stack.pop()
+                ys = storages[y]
+                for nsid in sorted(ys.deps | ys.children):
+                    if nsid in live_set and nsid not in seen:
+                        seen.add(nsid)
+                        comp.append(nsid)
+                        stack.append(nsid)
+            nr = uf.make(0.0)
+            total = 0.0
+            for y in comp:
+                ys = storages[y]
+                total += ys.local_cost
+                uf._parent[ys.uf] = nr
+            uf._cost[nr] = total
+            uf.accesses += len(comp)
+            self._uf_members[nr] = comp
+            if first_root is None:
+                first_root = nr
+        if first_root is not None and uf._parent[root] == root:
+            # Point the abandoned root at a successor so stale phantom
+            # handles cannot resurrect the old (now meaningless) sum.
+            # (Skipped when the old root is itself a live member's handle —
+            # the member loop above already re-parented it.)
+            uf._parent[root] = first_root
+            uf._cost[root] = 0.0
+
+    # ------------------------------------------------------------------
+    # Dead-subgraph pruning
+    # ------------------------------------------------------------------
+    def _maybe_die(self, s: StorageRec) -> None:
+        """Mark ``s`` (and transitively its ancestors) dead if unreachable.
+
+        A storage is *dead* when no external reference can ever touch it
+        again: its own refcount is zero and every child storage is dead or
+        banished — so no rematerialization of a live tensor can require it
+        (parents of a live storage are live by induction).  Dead storages
+        are pruned from the evicted-component structure: they never join
+        components, never subscribe, and never inflate e*/ẽ* — the fix for
+        eager-release workloads whose e* walk cost otherwise grows with
+        trace length.
+        """
+        storages = self.storages
+        stack = [s]
+        while stack:
+            x = stack.pop()
+            if x.dead or x.banished or x.refs > 0:
+                continue
+            if any(not (storages[c].dead or storages[c].banished)
+                   for c in x.children):
+                continue
+            self._kill(x)
+            for psid in x.deps:
+                p = storages[psid]
+                if p.refs <= 0 and not p.dead and not p.banished:
+                    stack.append(p)
+
+    def _kill(self, x: StorageRec) -> None:
+        x.dead = True
+        if not x.resident and not x.banished:
+            # x leaves the exact e* closures (walks prune the dead):
+            # cached values that summed it are stale.  Its ẽ* component
+            # membership is deliberately kept — dead members stay cost
+            # ballast for the undirected equivalence classes.
+            self._invalidator.on_death(x)
+        elif self.index is not None:
+            # Dying while resident: the transfer below zeroes x.dead_cost,
+            # so x's own cached heap key (computed with the old weight) is
+            # stale — drop it or the index could prune a band the scan
+            # would pick from.
+            self.index.mark_dirty(x.sid)
+        # Attach the dead subgraph's frozen cone cost to its live frontier:
+        # every live neighbor that the paper's e* walk would have counted
+        # the cone through carries it as ``dead_cost``, charged in O(1)
+        # when the neighbor is scored or walked — the cone itself is never
+        # traversed or subscribed through again.  Death cascades
+        # child-first, so a dying parent forwards the cone weight its own
+        # ``dead_cost`` already accumulated.  (A cone shared by several
+        # live parents is charged at each of them — a deliberate
+        # over-approximation; the pre-pruning walk deduplicated across one
+        # closure, but per-parent attachment keeps the charge local and
+        # event-free.)  Pinned/constant neighbors are skipped: they are
+        # never victims and never walked, so weight parked there would
+        # vanish from the score system — exactly as the old walks could
+        # never reach a cone hanging only off pinned storages.
+        transfer = x.local_cost + x.dead_cost
+        x.dead_cost = 0.0
+        if transfer <= 0.0:
+            return
+        for nsid in sorted(x.deps | x.children):
+            host = self.storages[nsid]
+            if host.dead or host.banished or host.pinned or host.constant:
+                continue
+            host.dead_cost += transfer
+            if not host.resident:
+                # Cached e* closures that summed ``host`` hold its old
+                # effective cost; adjacency is unchanged (sum-only).  The
+                # ẽ* component sums are untouched: the cone's members
+                # carry their own cost there.
+                self._invalidator.on_cost_change(host)
+            elif self.index is not None:
+                # Resident host: only its own key/score carries the weight.
+                self.index.mark_dirty(host.sid)
+
+    def _revive(self, s: StorageRec) -> None:
+        """A dead storage regained a reference (addref / new view).
+
+        Undo the pruning: the storage (and every dead ancestor — they all
+        have a live descendant again) rejoins the evicted components.
+
+        Known drift, accepted: the cone weight ``_kill`` already donated
+        to the live frontier is not clawed back, so a revived storage is
+        briefly double-counted (once live, once inside its neighbors'
+        ``dead_cost``).  A well-formed log cannot reach this path — a
+        handle with zero references cannot be addref'd or viewed — so the
+        drift only affects hand-driven runtimes, and only as a transient
+        over-protection of the revived storage's neighbors.
+        """
+        storages = self.storages
+        stack = [s]
+        while stack:
+            x = stack.pop()
+            if not x.dead:
+                continue
+            x.dead = False
+            if not x.resident and not x.banished:
+                self._invalidator.on_evict(x)
+                if self.uf is not None and not x.uf_joined:
+                    self._uf_join(x)
+            stack.extend(storages[p] for p in x.deps if storages[p].dead)
 
     def _try_banish(self, s: StorageRec) -> None:
-        # Banishable iff no *evicted* dependents (children all resident or
-        # banished); otherwise retried after rematerializations.
+        # Banishable iff no *live* evicted dependents (children all
+        # resident, banished, or dead); otherwise retried after
+        # rematerializations.  Dead evicted children never rematerialize,
+        # so they must not block the banish forever.
         for csid in s.children:
             c = self.storages[csid]
-            if not c.resident and not c.banished:
+            if not c.resident and not c.banished and not c.dead:
                 self._pending_banish.add(s.sid)
                 return
         self._pending_banish.discard(s.sid)
@@ -602,6 +887,11 @@ class DTRRuntime:
             c = self.storages[csid]
             if not c.banished:
                 c.pinned = True
+        # A banished child counts as dead for its parents' liveness rule.
+        for psid in s.deps:
+            p = self.storages[psid]
+            if p.refs <= 0 and not p.dead and not p.banished:
+                self._maybe_die(p)
 
     # ------------------------------------------------------------------
     # Metadata used by heuristics
@@ -616,6 +906,14 @@ class DTRRuntime:
         computing, the walk subscribes ``s`` to the evicted component of
         every storage it sums, so an evict/remat elsewhere leaves this
         entry intact.
+
+        The walk visits *live* evicted storages only.  Dead subgraphs
+        (eager-released tensors whose whole descendant cone is
+        unreferenced) are never traversed: their aggregate cost is charged
+        in O(1) through the ``dead_cost`` attached to each walked storage
+        — same sum as walking the cone, none of the per-member visits or
+        subscriptions, so walk cost is bounded by the live evicted set
+        instead of growing with trace length.
         """
         hit = self._estar_cache.get(s.sid)
         if hit is not None:
@@ -632,7 +930,7 @@ class DTRRuntime:
             seen.add(x)
             self.meta_accesses += 1
             xs = self.storages[x]
-            total += xs.local_cost
+            total += xs.local_cost + xs.dead_cost
             subscribe(x, s.sid)
             stack.extend(d for d in xs.deps if self._is_evicted(d) and d not in seen)
         # Evicted descendants: closure over evicted children.
@@ -644,7 +942,7 @@ class DTRRuntime:
             seen.add(x)
             self.meta_accesses += 1
             xs = self.storages[x]
-            total += xs.local_cost
+            total += xs.local_cost + xs.dead_cost
             subscribe(x, s.sid)
             stack.extend(c for c in xs.children
                          if self._is_evicted(c) and c not in seen)
@@ -677,31 +975,61 @@ class DTRRuntime:
     def eq_neighborhood_cost(self, s: StorageRec) -> float:
         """ẽ*(S) via union-find components of evicted neighbors (App. C.2).
 
-        Scoped caching mirrors ``evicted_neighborhood_cost``: the value only
-        depends on the component roots and cost sums of evicted neighbors,
-        both of which mutate exactly on evict (union + add_cost) and remat
-        (split) events — which pop the subscriptions registered here.
+        Two-tier scoped caching:
+
+        * the **value** (``_eq_cache``) is dropped whenever any adjacent
+          component's sum changes — merges, splits, and member cost growth
+          alike (the ScopedInvalidator pops the subscriptions registered
+          here);
+        * the **adjacency snapshot** (``_eq_adj``) — the union-find handles
+          of S's evicted neighbors, in sorted-sid order — survives
+          component-*sum*-only events and is dropped only when a neighbor
+          actually enters or leaves the evicted set.  While it holds, a
+          key rebuild resolves each remembered handle to its current root
+          and reads the incrementally-maintained root sum: no neighborhood
+          re-walk, no re-subscription.  The sorted order makes the float
+          summation a pure function of current state, so scan and index
+          engines (whose evaluation times differ) compute bit-identical
+          values.
         """
         assert self.uf is not None
         hit = self._eq_cache.get(s.sid)
         if hit is not None:
             return hit
-        subscribe = self._invalidator.subscribe
-        roots: set[int] = set()
-        total = 0.0
-        for nsid in s.deps | s.children:
-            ns = self.storages[nsid]
-            if not ns.resident and not ns.banished:
-                r = self.uf.find(ns.uf)
-                self.meta_accesses += 1
-                subscribe(nsid, s.sid)
+        uf = self.uf
+        snap = self._eq_adj.get(s.sid)
+        if snap is not None:
+            roots: set[int] = set()
+            total = 0.0
+            for h in snap:
+                r = uf.find(h)
                 if r not in roots:
                     roots.add(r)
-                    total += self.uf._cost[r]
-        self.meta_accesses += len(roots)
+                    total += uf.root_sum(r)
+            self.meta_accesses += 1
+            self._eq_cache[s.sid] = total
+            return total
+        subscribe = self._invalidator.subscribe
+        roots = set()
+        total = 0.0
+        handles: list[int] = []
+        # Dead neighbors count here (unlike the exact walk): they are
+        # members of the equivalence classes, so their component is part
+        # of ẽ* by construction.
+        for nsid in sorted(s.deps | s.children):
+            ns = self.storages[nsid]
+            if not ns.resident and not ns.banished:
+                r = uf.find(ns.uf)
+                self.meta_accesses += 1
+                subscribe(nsid, s.sid)
+                handles.append(ns.uf)
+                if r not in roots:
+                    roots.add(r)
+                    total += uf.root_sum(r)
+        self._eq_adj[s.sid] = tuple(handles)
         self._eq_cache[s.sid] = total
         return total
 
     def _is_evicted(self, sid: int) -> bool:
         s = self.storages[sid]
-        return not s.resident and not s.banished
+        return not s.resident and not s.banished and not s.dead

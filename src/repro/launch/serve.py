@@ -76,69 +76,79 @@ def main(argv=None):
         serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
         cache = M.init_cache(cfg, args.slots, args.max_len)
 
-        # Per-slot state: (req_id, prompt, consumed, generated, done_at)
+        # True continuous batching: each slot carries its own position
+        # clock (decode_step accepts a [slots] pos vector — per-slot cache
+        # scatter + per-slot masks/rope), so a finished slot is refilled
+        # on the very next global step while its neighbors keep decoding.
         slots = [None] * args.slots
         tok = np.zeros((args.slots, 1), np.int32)
-        pos = 0
+        pos = np.zeros(args.slots, np.int32)
         completed = {}
         t0 = time.perf_counter()
         steps = 0
 
-        def refill():
-            for s in range(args.slots):
-                if slots[s] is None and queue:
-                    rid, prompt = queue.popleft()
-                    # NOTE: per-slot positions require a batched-pos decode
-                    # path; this driver uses a shared position clock and
-                    # fresh-cache batches per wave (simple + correct).
-                    slots[s] = {"rid": rid, "prompt": prompt, "i": 0,
-                                "out": []}
+        def reset_slot_cache(cache, i):
+            """Zero slot ``i``'s rows so recurrent-state blocks (RWKV /
+            RG-LRU carry no ``pos`` and are *not* masked by it) start the
+            new request clean.  Attention caches are position-masked, so
+            zeroing them is merely hygienic.  Every leaf of
+            ``M.init_cache`` is a per-layer scan stack ``[layers, slots,
+            ...]`` — the slot axis is always axis 1 (sizes are not used to
+            guess it, so a leaf whose later dims happen to equal the slot
+            count cannot be zeroed along the wrong axis)."""
+            return jax.tree.map(
+                lambda x: x.at[:, i].set(0)
+                if x.ndim >= 2 and x.shape[1] == args.slots else x,
+                cache)
 
-        # Wave-based continuous batching: all active slots share the
-        # position clock; when every slot finishes, the cache resets and the
-        # next wave starts (per-slot position offsets are the next step —
-        # noted in DESIGN.md).
+        def refill():
+            nonlocal cache
+            for i in range(args.slots):
+                if slots[i] is None and queue:
+                    rid, prompt = queue.popleft()
+                    slots[i] = {"rid": rid, "prompt": prompt, "i": 0,
+                                "out": []}
+                    pos[i] = 0
+                    cache = reset_slot_cache(cache, i)
+
         while queue or any(s is not None for s in slots):
-            refill()
-            cache = M.init_cache(cfg, args.slots, args.max_len)
-            pos = 0
-            active = [s for s in slots if s is not None]
-            if not active:
+            refill()   # mid-stream: neighbors keep their positions
+            if not any(s is not None for s in slots):
                 break
-            horizon = max(len(s["prompt"]) for s in active) + args.gen
-            for pos in range(horizon):
-                for i, s in enumerate(slots):
-                    if s is None:
-                        tok[i, 0] = 0
-                    elif pos < len(s["prompt"]):
-                        tok[i, 0] = s["prompt"][pos]
-                    # else: keep model-generated token
-                nxt, cache = serve(params, cache,
-                                   jnp.asarray(tok), jnp.int32(pos))
-                steps += 1
-                nxt_np = np.asarray(nxt)[..., 0] if cfg.n_codebooks else \
-                    np.asarray(nxt)
-                for i, s in enumerate(slots):
-                    if s is None:
-                        continue
+            for i, s in enumerate(slots):
+                if s is None:
+                    tok[i, 0] = 0
+                elif pos[i] < len(s["prompt"]):
+                    tok[i, 0] = s["prompt"][pos[i]]
+                # else: keep the model-generated token for this slot
+            nxt, cache = serve(params, cache,
+                               jnp.asarray(tok), jnp.asarray(pos))
+            steps += 1
+            nxt_np = np.asarray(nxt)[..., 0] if cfg.n_codebooks else \
+                np.asarray(nxt)
+            for i, s in enumerate(slots):
+                if s is None:
+                    continue
+                if tracer is not None:
+                    if s["i"] == 0:
+                        tracer.prefill(s["rid"], i, 1)
+                    else:
+                        tracer.decode(
+                            s["rid"], i, int(pos[i]),
+                            phase="prompt" if pos[i] < len(s["prompt"])
+                            else "decode")
+                    s["i"] += 1
+                if pos[i] >= len(s["prompt"]) - 1:
+                    s["out"].append(int(nxt_np[i, 0]))
+                    tok[i, 0] = nxt_np[i, 0]
+                pos[i] += 1
+                if len(s["out"]) >= args.gen or pos[i] >= args.max_len:
+                    completed[s["rid"]] = s["out"]
                     if tracer is not None:
-                        if s["i"] == 0:
-                            tracer.prefill(s["rid"], i, 1)
-                        else:
-                            tracer.decode(
-                                s["rid"], i, pos,
-                                phase="prompt" if pos < len(s["prompt"])
-                                else "decode")
-                        s["i"] += 1
-                    if pos >= len(s["prompt"]) - 1:
-                        s["out"].append(int(nxt_np[i, 0]))
-                        tok[i, 0] = nxt_np[i, 0]
-                    if len(s["out"]) >= args.gen:
-                        completed[s["rid"]] = s["out"]
-                        if tracer is not None:
-                            tracer.retire(s["rid"], i)
-                        slots[i] = None
-            # wave done; loop refills from queue
+                        tracer.retire(s["rid"], i)
+                    slots[i] = None
+                    # the freed slot refills on the next loop iteration —
+                    # captured traces now exercise interleaved lifetimes
 
         dt = time.perf_counter() - t0
         print(f"served {len(completed)}/{args.requests} requests, "

@@ -184,12 +184,24 @@ def causal_mask(sq: int, skv: int, window: int = 0) -> jax.Array:
 
 
 def decode_mask(pos: jax.Array, skv: int, window: int = 0) -> jax.Array:
-    """Mask for one-token decode at absolute position ``pos`` (scalar)."""
+    """Mask for one-token decode at absolute position ``pos``.
+
+    ``pos`` is a scalar (shared position clock) or a ``[B]`` vector
+    (per-slot position clocks, continuous batching).  Returns
+    ``[1,1,1,1,Skv]`` / ``[B,1,1,1,Skv]`` respectively.
+    """
+    if jnp.ndim(pos) == 0:
+        kpos = jnp.arange(skv)[None, :]
+        m = kpos <= pos
+        if window > 0:
+            m = m & (pos - kpos < window)
+        return m[None, None, None]
     kpos = jnp.arange(skv)[None, :]
-    m = kpos <= pos
+    p = pos[:, None]
+    m = kpos <= p
     if window > 0:
-        m = m & (pos - kpos < window)
-    return m[None, None, None]
+        m = m & (p - kpos < window)
+    return m[:, None, None, None, :]
 
 
 def attention_apply(cfg: ModelConfig, p, x, *, positions, window: int = 0,
@@ -223,20 +235,35 @@ def attention_apply(cfg: ModelConfig, p, x, *, positions, window: int = 0,
     else:
         pos = cache["pos"]
         length = cache["k"].shape[1]
+        per_slot = jnp.ndim(pos) > 0   # [B] position clocks (continuous
+        #                                batching) vs one shared scalar
         if window > 0 and length <= window:
             # Ring buffer: slot j holds absolute position pos-((pos-j) mod L).
             slot = jnp.mod(pos, length)
-            k_all = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k, slot, axis=1)
-            v_all = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v, slot, axis=1)
-            abs_pos = pos - jnp.mod(pos - jnp.arange(length), length)
-            mask = (abs_pos >= 0)[None, None, None, None, :]
+            if per_slot:
+                rows = jnp.arange(k.shape[0])
+                k_all = cache["k"].at[rows, slot].set(k[:, 0])
+                v_all = cache["v"].at[rows, slot].set(v[:, 0])
+                abs_pos = pos[:, None] - jnp.mod(
+                    pos[:, None] - jnp.arange(length)[None, :], length)
+                mask = (abs_pos >= 0)[:, None, None, None, :]
+            else:
+                k_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, slot, axis=1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, slot, axis=1)
+                abs_pos = pos - jnp.mod(pos - jnp.arange(length), length)
+                mask = (abs_pos >= 0)[None, None, None, None, :]
         else:
-            k_all = jax.lax.dynamic_update_slice_in_dim(
-                cache["k"], k, pos, axis=1)
-            v_all = jax.lax.dynamic_update_slice_in_dim(
-                cache["v"], v, pos, axis=1)
+            if per_slot:
+                rows = jnp.arange(k.shape[0])
+                k_all = cache["k"].at[rows, pos].set(k[:, 0])
+                v_all = cache["v"].at[rows, pos].set(v[:, 0])
+            else:
+                k_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["k"], k, pos, axis=1)
+                v_all = jax.lax.dynamic_update_slice_in_dim(
+                    cache["v"], v, pos, axis=1)
             mask = decode_mask(pos, length, window)
         new_cache = {"k": k_all, "v": v_all, "pos": pos + 1}
         k, v = k_all, v_all

@@ -111,10 +111,16 @@ def mla_apply(cfg: ModelConfig, p, x, *, positions,
     else:
         # Decode (absorbed): score/aggregate directly in latent space.
         pos = cache["pos"]
-        ckv_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["ckv"], ckv, pos, axis=1)
-        kr_all = jax.lax.dynamic_update_slice_in_dim(
-            cache["krope"], k_rope_new, pos, axis=1)
+        if jnp.ndim(pos) > 0:
+            # Per-slot position clocks (continuous batching).
+            rows = jnp.arange(ckv.shape[0])
+            ckv_all = cache["ckv"].at[rows, pos].set(ckv[:, 0])
+            kr_all = cache["krope"].at[rows, pos].set(k_rope_new[:, 0])
+        else:
+            ckv_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["ckv"], ckv, pos, axis=1)
+            kr_all = jax.lax.dynamic_update_slice_in_dim(
+                cache["krope"], k_rope_new, pos, axis=1)
         new_cache = {"ckv": ckv_all, "krope": kr_all, "pos": pos + 1}
         # absorb: q_lat[b,q,h,kl] = q_nope . wk_b^T
         q_lat = jnp.einsum("bqhn,khn->bqhk", q_nope, p["wk_b"].astype(dt))

@@ -368,11 +368,15 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int):
 def decode_step(cfg: ModelConfig, params, token, cache, pos, img_embed=None):
     """One-token decode: token [B,1] (or [B,1,K]) at absolute position pos.
 
-    Returns (logits, new_cache).  ``pos`` is a traced int32 scalar; caches
-    are stacked per scan group and updated functionally.
+    Returns (logits, new_cache).  ``pos`` is a traced int32 scalar (one
+    shared position clock) or a ``[B]`` vector of per-slot clocks —
+    continuous batching, where each slot's request sits at its own
+    position.  Caches are stacked per scan group and updated functionally.
     """
     x = _embed(cfg, params["embed"], token)
-    positions = pos[None] if pos.ndim == 0 else pos
+    # Rope wants positions broadcastable to [..., S] with S=1 here:
+    # scalar -> [1]; per-slot [B] -> [B, 1].
+    positions = pos[None] if pos.ndim == 0 else pos[:, None]
     img_kv = img_embed.astype(L.adtype(cfg)) if img_embed is not None else None
 
     def inject(c):

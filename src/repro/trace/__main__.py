@@ -23,6 +23,10 @@ from . import replay as R
 SOURCES = ("serve", "serve-step", "train-step", "eager-mlp", "treelstm",
            "random-dag")
 
+#: replay/report heuristic trio when --heuristics is not given (--verify
+#: instead defaults to every separable heuristic).
+DEFAULT_HEURISTICS = ("h_dtr", "h_dtr_eq", "h_lru")
+
 
 def _capture(args) -> Log:
     if args.source == "serve":
@@ -49,9 +53,11 @@ def _capture(args) -> Log:
     raise SystemExit(f"unknown source {args.source}")
 
 
-def _verify(log: Log, fractions, thrash_factor=50.0) -> int:
+def _verify(log: Log, fractions, thrash_factor=50.0,
+            heuristics=None) -> int:
+    kw = {"heuristics": tuple(heuristics)} if heuristics else {}
     rep = R.verify_oracle_equivalence(log, fractions=fractions,
-                                      thrash_factor=thrash_factor)
+                                      thrash_factor=thrash_factor, **kw)
     status = "OK" if rep["ok"] else "MISMATCH"
     n_h = rep['cells'] // max(len(fractions), 1)
     print(f"verify[{log.name}]: {status} over {rep['cells']} cells "
@@ -78,9 +84,13 @@ def cmd_replay(args) -> int:
     with open(args.trace) as f:
         log = Log.loads(f.read())
     if args.verify:
-        return _verify(log, tuple(args.fractions), args.thrash_factor)
+        # --verify honors --heuristics so CI can gate a single heuristic
+        # (e.g. h_dtr_eq on the golden corpus) without replaying the full
+        # separable family per trace.
+        return _verify(log, tuple(args.fractions), args.thrash_factor,
+                       heuristics=args.heuristics)
     curves = R.replay_budget_curve(
-        log, heuristics=tuple(args.heuristics),
+        log, heuristics=tuple(args.heuristics or DEFAULT_HEURISTICS),
         fractions=tuple(args.fractions), index=not args.scan,
         processes=args.processes, thrash_factor=args.thrash_factor)
     for c in curves:
@@ -109,6 +119,7 @@ def _smoke_trace_set(args) -> list[Log]:
 
 
 def cmd_report(args) -> int:
+    args.heuristics = list(args.heuristics or DEFAULT_HEURISTICS)
     if args.traces:
         logs = []
         for path in args.traces:
@@ -170,8 +181,11 @@ def main(argv=None) -> int:
         p.add_argument("--arch", default="qwen2-0.5b")
         p.add_argument("--smoke", action="store_true")
         p.add_argument("--seed", type=int, default=0)
-        p.add_argument("--heuristics", nargs="+",
-                       default=["h_dtr", "h_dtr_eq", "h_lru"])
+        # Default None so --verify can distinguish "user narrowed the
+        # family" (gate those heuristics only) from "unset" (gate every
+        # separable heuristic); non-verify paths fall back to the report
+        # trio below.
+        p.add_argument("--heuristics", nargs="+", default=None)
         p.add_argument("--fractions", nargs="+", type=float,
                        default=list(R.DEFAULT_FRACTIONS))
         p.add_argument("--processes", type=int, default=None)

@@ -36,6 +36,60 @@ def test_ring_buffer_wraps_correctly():
     assert rel < 2e-2, f"ring-buffer mismatch after wrap: {rel}"
 
 
+def test_decode_per_slot_positions_match_scalar_clock():
+    """A [B] pos vector with equal entries must reproduce the scalar-pos
+    decode bit-for-bit, and staggered per-slot clocks must match running
+    each slot alone at its own position (continuous batching)."""
+    cfg = configs.get_smoke("qwen2-0.5b")
+    key = jax.random.PRNGKey(2)
+    params = M.init_params(cfg, key)
+    b, s = 3, 10
+    tokens = jax.random.randint(key, (b, s), 0, cfg.vocab)
+    step = jax.jit(lambda p, t, c, pos: M.decode_step(cfg, p, t, c, pos))
+
+    # 1. uniform vector == scalar
+    c_scalar = M.init_cache(cfg, b, s)
+    c_vec = M.init_cache(cfg, b, s)
+    for i in range(4):
+        lg_s, c_scalar = step(params, tokens[:, i:i + 1], c_scalar,
+                              jnp.int32(i))
+        lg_v, c_vec = step(params, tokens[:, i:i + 1], c_vec,
+                           jnp.full((b,), i, jnp.int32))
+        np.testing.assert_array_equal(np.asarray(lg_s), np.asarray(lg_v))
+
+    # 2. staggered clocks: decode slots at positions (4, 2, 0) in one
+    # batched call; each row must equal the same-position decode of a
+    # batch whose rows all sit at that position.
+    offsets = [4, 2, 0]
+    caches = {off: M.init_cache(cfg, b, s) for off in set(offsets)}
+    for off in set(offsets):
+        for i in range(off):
+            _, caches[off] = step(params, tokens[:, i:i + 1], caches[off],
+                                  jnp.int32(i))
+    # Build a mixed cache: row j from caches[offsets[j]].
+    leaves = [jax.tree.leaves(caches[off]) for off in offsets]
+    treedef = jax.tree.structure(caches[offsets[0]])
+    mixed_leaves = []
+    for parts in zip(*leaves):
+        x = parts[0]
+        if x.ndim >= 2 and x.shape[1] == b:      # group-stacked leaf
+            x = jnp.stack([parts[j][:, j] for j in range(b)], axis=1)
+        elif x.ndim >= 1 and x.shape[0] == b:    # flat per-slot leaf
+            x = jnp.stack([parts[j][j] for j in range(b)], axis=0)
+        mixed_leaves.append(x)
+    mixed = jax.tree.unflatten(treedef, mixed_leaves)
+    tok_mixed = jnp.stack([tokens[j, offsets[j]:offsets[j] + 1]
+                           for j in range(b)], axis=0)
+    lg_mixed, _ = step(params, tok_mixed, mixed,
+                       jnp.asarray(offsets, jnp.int32))
+    for j, off in enumerate(offsets):
+        lg_ref, _ = step(params, tokens[:, off:off + 1], caches[off],
+                         jnp.int32(off))
+        np.testing.assert_allclose(np.asarray(lg_mixed)[j],
+                                   np.asarray(lg_ref)[j],
+                                   rtol=2e-5, atol=2e-5)
+
+
 def test_moe_capacity_drops_are_graceful():
     """Lower capacity drops tokens (outputs differ) but never NaNs, and
     capacity >= S*k/E * big is drop-free deterministic."""

@@ -107,7 +107,51 @@ def test_replay_matches_expected(name, expected):
 
 
 # ---------------------------------------------------------------------------
-# 3. deterministic sources re-capture to the committed bytes
+# 3. heuristic fidelity: h_dtr_eq must track exact h_dtr on real traces
+# ---------------------------------------------------------------------------
+
+# The eq-vs-exact gate: at every pinned activation-budget point, h_dtr_eq's
+# total compute must stay within this factor of exact h_dtr's.  Both runs
+# are capped at FIDELITY_THRASH x baseline, so a cell where the union-find
+# approximation thrashes while the exact walk stays healthy shows up as a
+# ratio near the cap (e.g. the pre-fix train trace at 0.9: eq aborted at
+# 10x while exact finished at 1.198x).
+FIDELITY_RATIO = 1.5
+FIDELITY_THRASH = 10.0
+
+
+@pytest.mark.parametrize("name,fractions", [
+    # 0.9/0.95: both heuristics are healthy (~1.05-1.2x) — the ratio is a
+    # live tripwire for eq degradation.  0.6-0.8: the accumulated-gradient
+    # residency floor saturates *every* heuristic (LRU included); the gate
+    # still fails if eq ever does over 1.5x the work exact does.
+    ("train_smoke", (0.95, 0.9, 0.8, 0.7, 0.6)),
+    # Continuous-batching serve trace: retired-request dead cones are the
+    # workload the dead-subgraph pruning targets.
+    ("serve_smoke_s4", (0.7, 0.5)),
+])
+def test_eq_tracks_exact_on_real_traces(name, fractions):
+    log = load_trace(name)
+    peak, _ = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    for f in fractions:
+        budget = resolve_budget(f, peak, pinned, "activation")
+        exact, _ = run_trace(log, "h_dtr", budget,
+                             thrash_factor=FIDELITY_THRASH)
+        eq, _ = run_trace(log, "h_dtr_eq", budget,
+                          thrash_factor=FIDELITY_THRASH)
+        assert eq.compute <= FIDELITY_RATIO * exact.compute, (
+            f"{name}@{f}: h_dtr_eq compute {eq.compute:.3g} exceeds "
+            f"{FIDELITY_RATIO}x exact h_dtr's {exact.compute:.3g} "
+            f"(eq ok={eq.ok}, exact ok={exact.ok})")
+        if exact.ok:
+            assert eq.ok, (
+                f"{name}@{f}: h_dtr_eq thrashes where exact h_dtr "
+                f"holds {exact.slowdown:.3f}x")
+
+
+# ---------------------------------------------------------------------------
+# 4. deterministic sources re-capture to the committed bytes
 # ---------------------------------------------------------------------------
 
 def test_serve_driver_recapture_is_bit_identical():
