@@ -146,6 +146,19 @@ def serving():
     return _timed("serving", fn, derive)
 
 
+def perf_offload():
+    from . import perf_offload as m
+
+    def derive(rows):
+        rep = rows[0]
+        if not rep["gate"]["ok"] or not rep["equivalence"]["ok"]:
+            return "OFFLOAD GATE FAILED"
+        return (f"cells={len(rep['rows'])} "
+                f"hybrid_wins={len(rep['hybrid_wins'])}")
+
+    return _timed("perf_offload", lambda: [m.run(smoke=True)], derive)
+
+
 def roofline():
     from . import roofline as m
 
@@ -169,6 +182,7 @@ def main() -> None:
     fig_fragmentation()
     perf_runtime()
     serving()
+    perf_offload()
     roofline()
 
 

@@ -67,18 +67,28 @@ class PoolAllocator:
             return
         if not self.pool.alloc(s.sid, size):
             window = self.plan_window(rt, size, exclude)
-            if window is None:
-                from ..core.runtime import OOMError
-                st = self.pool.stats()
-                raise OOMError(
-                    f"no contiguous window for {size} bytes "
-                    f"(free={st.free}, largest_free={st.largest_free}, "
-                    f"frag_ratio={st.frag_ratio:.3f}, "
-                    f"capacity={st.capacity})")
+            while window is None:
+                # Before declaring OOM, reclaim in-flight prefetch-back
+                # reservations (repro.offload): their blocks are neither
+                # free nor evictable, so the planner cannot see them.
+                off = getattr(rt, "offload", None)
+                if off is None or not off.cancel_one_prefetch(rt):
+                    from ..core.runtime import OOMError
+                    st = self.pool.stats()
+                    raise OOMError(
+                        f"no contiguous window for {size} bytes "
+                        f"(free={st.free}, largest_free={st.largest_free}, "
+                        f"frag_ratio={st.frag_ratio:.3f}, "
+                        f"capacity={st.capacity})")
+                if self.pool.alloc(s.sid, size):
+                    rt.memory += size
+                    rt.peak_memory = max(rt.peak_memory, rt.memory)
+                    return
+                window = self.plan_window(rt, size, exclude)
             self.evict_windows += 1
             self.window_evictions += len(window)
             for victim in window:
-                rt._evict(victim)
+                rt._evict_or_offload(victim)
             ok = self.pool.alloc(s.sid, size)
             assert ok, "window eviction must open a large-enough block"
         rt.memory += size

@@ -171,7 +171,10 @@ class ScopedInvalidator:
                 # pruned; with one they are ẽ* component members whose
                 # epoch components must keep mirroring the cost ones.
                 continue
-            if ns.resident:
+            if ns.resident or ns.offloaded:
+                # Offloaded neighbors behave like resident ones here: they
+                # are outside the evicted components (no remat needed) but
+                # their own keys can sum over ``s`` once it is evicted.
                 full.add(nsid)
             else:
                 r = self._uf.find(self._node_of(nsid))
@@ -308,6 +311,16 @@ class EvictIndex:
         assert getattr(self.heuristic, "separable", False), (
             f"{self.heuristic!r} does not declare a separable decomposition")
         self.stale = bool(self.heuristic.uses_staleness)
+        # Two-choice offload composition (repro.offload.HybridHeuristic):
+        # the effective score is min(base recompute side, transfer side).
+        # The base keys live in the structures below as usual; a second
+        # *offload key family* (``_okeys``/``_obands``/``_okheap``) holds
+        # the transfer keys — constant per storage, computed once at
+        # membership, never invalidated.  Selection walks both families
+        # (each side's band floors bound that side of the min), and every
+        # surviving candidate is verified with the full hybrid score, so
+        # bit-exactness against the linear scan is preserved.
+        self.hybrid = bool(getattr(self.heuristic, "hybrid", False))
         self.members: set[int] = set()
         self._dirty: set[int] = set()
         # sid -> last computed key, present iff still valid.  Keys survive
@@ -328,6 +341,13 @@ class EvictIndex:
         # Staleness-free organization: one (key, sid, version) heap.
         self._kheap: list[tuple[float, int, int]] = []
         self._ver: dict[int, int] = {}
+        # Offload key family (hybrid heuristics only).
+        self._okeys: dict[int, float] = {}             # sid -> constant key
+        self._obands: dict[int, list[tuple[float, int]]] = {}
+        self._oband_ids: list[int] = []
+        self._oslot: dict[int, tuple[int, float]] = {}
+        self._okheap: list[tuple[float, int]] = []     # staleness-free side
+        self._oin: set[int] = set()                    # sids with live entry
         # Telemetry.
         self.picks = 0
         self.pops = 0
@@ -342,8 +362,11 @@ class EvictIndex:
     def on_storage_event(self, s, name: str) -> None:
         sid = s.sid
         if name == "last_access":
-            if self.stale and sid in self.members and sid in self._keys:
-                self._place(sid, self._keys[sid], s.last_access)
+            if self.stale and sid in self.members:
+                if sid in self._keys:
+                    self._place(sid, self._keys[sid], s.last_access)
+                if self.hybrid:
+                    self._oplace(sid, self._okeys[sid], s.last_access)
             return
         if name == "local_cost":
             # The staleness-free key depends on local_cost for every
@@ -361,6 +384,15 @@ class EvictIndex:
             elif self.stale:
                 self._place(sid, k, s.last_access)
             # staleness-free: the dormant (k, sid, ver) entry revives.
+            if self.hybrid:
+                ok = self._okeys.get(sid)
+                if ok is None:
+                    ok = self._okeys[sid] = self.heuristic.offload_key(s)
+                if self.stale:
+                    self._oplace(sid, ok, s.last_access)
+                elif sid not in self._oin:
+                    heapq.heappush(self._okheap, (ok, sid))
+                    self._oin.add(sid)
         elif not now and sid in self.members:
             self.members.discard(sid)
             self._dirty.discard(sid)
@@ -412,14 +444,30 @@ class EvictIndex:
         heapq.heappush(heap, (la, sid))
         self._slot[sid] = (b, la)
 
+    def _oplace(self, sid: int, k: float, la: float) -> None:
+        """Offload-family twin of :meth:`_place` (hybrid heuristics)."""
+        b = self._band_of(k)
+        if self._oslot.get(sid) == (b, la):
+            return
+        heap = self._obands.get(b)
+        if heap is None:
+            heap = self._obands[b] = []
+            bisect.insort(self._oband_ids, b)
+        heapq.heappush(heap, (la, sid))
+        self._oslot[sid] = (b, la)
+
     def _flush_dirty(self) -> None:
         rt = self.rt
         h = self.heuristic
+        # Hybrid heuristics keep the recompute side in the main key family
+        # (the constant transfer side lives in the offload family), so the
+        # flushed key is the *base* key, not the min.
+        keyfn = h.base_key if self.hybrid else h.key
         for sid in self._dirty:
             s = rt.storages[sid]
             rt.meta_accesses += 1
             self.key_recomputes += 1
-            k = h.key(rt, s)
+            k = keyfn(rt, s)
             self._keys[sid] = k
             if self.stale:
                 self._place(sid, k, s.last_access)
@@ -469,14 +517,14 @@ class EvictIndex:
         self.picks += 1
         if self.stale:
             return self._pick_banded(exclude)
+        if self.hybrid:
+            return self._pick_keyed_hybrid(exclude)
         return self._pick_keyed(exclude)
 
     def _pick_banded(self, exclude: set[int]) -> Optional[object]:
         rt = self.rt
         storages = rt.storages
         members = self.members
-        keys = self._keys
-        slot = self._slot
         clock = rt.clock
         heappop, heappush = heapq.heappop, heapq.heappush
 
@@ -485,11 +533,22 @@ class EvictIndex:
         best_sid = -1
         thresh = float("inf")     # best_score * (1 + eps), cached
         stash: list[tuple[list, tuple[float, int]]] = []
-        bands = self._bands
         band_of = self._band_of
 
-        def valid_top(b: int, heap: list):
+        # Key families: the recompute side, plus — for hybrid two-choice
+        # heuristics — the offload side.  Each family's band floors bound
+        # its own side of the min-score; a storage's hybrid argmin is
+        # always discoverable through its *winning* side's family, and
+        # every surviving candidate is verified with the full hybrid
+        # score, so pruning a storage in the losing family is sound.
+        fams = [(self._bands, self._band_ids, self._keys, self._slot)]
+        if self.hybrid:
+            fams.append((self._obands, self._oband_ids, self._okeys,
+                         self._oslot))
+
+        def valid_top(fam: int, b: int, heap: list):
             """Validated (la, sid) top of band ``b``; discards stale entries."""
+            keys, slot = fams[fam][2], fams[fam][3]
             while heap:
                 la, sid = heap[0]
                 if sid in members:
@@ -506,27 +565,28 @@ class EvictIndex:
         # member's staleness) and process most-promising first, so the
         # first walked band sets a near-optimal threshold and the rest are
         # usually skipped whole by their already-known bound.
-        order: list[tuple[float, int]] = []
-        for b in self._band_ids:
-            heap = bands[b]
-            if not heap:
-                continue
-            top = valid_top(b, heap)
-            if top is None:
-                continue
-            st = clock - top[0]
-            if st < _MIN_STALENESS:
-                st = _MIN_STALENESS
-            order.append((self._floor_of(b) / st, b))
+        order: list[tuple[float, int, int]] = []
+        for fam, (bands, band_ids, _k, _s) in enumerate(fams):
+            for b in band_ids:
+                heap = bands[b]
+                if not heap:
+                    continue
+                top = valid_top(fam, b, heap)
+                if top is None:
+                    continue
+                st = clock - top[0]
+                if st < _MIN_STALENESS:
+                    st = _MIN_STALENESS
+                order.append((self._floor_of(b) / st, fam, b))
         order.sort()
 
-        for initial_bound, b in order:
+        for initial_bound, fam, b in order:
             if initial_bound > thresh:
                 break                        # later bands only start worse
-            heap = bands[b]
+            heap = fams[fam][0][b]
             k_floor = self._floor_of(b)
             while heap:
-                top = valid_top(b, heap)
+                top = valid_top(fam, b, heap)
                 if top is None:
                     break
                 la, sid, k = top
@@ -590,4 +650,81 @@ class EvictIndex:
                 best, best_score, best_sid = s, sc, sid
         for entry in popped:
             heappush(kheap, entry)
+        return best
+
+    def _pick_keyed_hybrid(self, exclude: set[int]) -> Optional[object]:
+        """Merged two-heap walk for staleness-free hybrid heuristics.
+
+        Every member has one live entry per family (base key in
+        ``_kheap``, constant offload key in ``_okheap``), and for
+        staleness-free heuristics each entry's key *is* that side's score
+        bit-exactly — so the hybrid score of any unseen candidate is
+        bounded below by the smaller of the two validated heap tops.
+        Entries pop in ascending (key, sid) order across both heaps; the
+        walk breaks only once the merged top key strictly exceeds the best
+        verified score (continuing through ties so the lowest sid among
+        equal scores wins, as in the scan).
+        """
+        rt = self.rt
+        storages = rt.storages
+        members = self.members
+        ver = self._ver
+        kheap = self._kheap
+        oheap = self._okheap
+        oin = self._oin
+        heappop, heappush = heapq.heappop, heapq.heappush
+
+        best = None
+        best_score = 0.0
+        best_sid = -1
+        rpopped: list[tuple[float, int, int]] = []
+        opopped: list[tuple[float, int]] = []
+
+        def rtop():
+            while kheap:
+                k, sid, v = kheap[0]
+                if v != ver.get(sid):
+                    heappop(kheap)           # superseded by a newer push
+                    continue
+                if sid not in members:
+                    heappop(kheap)           # dormant: drop, re-add re-pushes
+                    self._keys.pop(sid, None)
+                    continue
+                return k, sid
+            return None
+
+        def otop():
+            while oheap:
+                k, sid = oheap[0]
+                if sid in members and sid in oin:
+                    return k, sid
+                heappop(oheap)               # dormant: membership re-pushes
+                oin.discard(sid)
+            return None
+
+        while True:
+            rt_top = rtop()
+            o_top = otop()
+            if rt_top is None and o_top is None:
+                break
+            use_r = o_top is None or (rt_top is not None and rt_top <= o_top)
+            k, sid = rt_top if use_r else o_top
+            if best is not None and k > best_score:
+                break
+            if use_r:
+                rpopped.append(heappop(kheap))
+            else:
+                opopped.append(heappop(oheap))
+            if sid in exclude:
+                continue
+            self.pops += 1
+            s = storages[sid]
+            sc = self.cached_score(s)
+            if (best is None or sc < best_score
+                    or (sc == best_score and sid < best_sid)):
+                best, best_score, best_sid = s, sc, sid
+        for entry in rpopped:
+            heappush(kheap, entry)
+        for entry in opopped:
+            heappush(oheap, entry)
         return best

@@ -48,6 +48,9 @@ class Heuristic:
     needs_uf: bool = False
     separable: bool = False         # has a key()/staleness decomposition
     uses_staleness: bool = False    # score == key / staleness
+    cost_aware: bool = False        # key prices recomputation (per byte) —
+    #                                 required as the base of the two-choice
+    #                                 hybrid offload policy (repro.offload)
 
     def score(self, rt, s) -> float:  # pragma: no cover - interface
         raise NotImplementedError
@@ -70,6 +73,7 @@ class HDTR(Heuristic):
     name = "h_dtr"
     separable = True
     uses_staleness = True
+    cost_aware = True
 
     def score(self, rt, s) -> float:
         c = s.local_cost + s.dead_cost + rt.evicted_neighborhood_cost(s)
@@ -91,6 +95,7 @@ class HDTREq(Heuristic):
     needs_uf = True
     separable = True
     uses_staleness = True
+    cost_aware = True
 
     def score(self, rt, s) -> float:
         # No ``dead_cost`` term here: dead storages are *members* of the
@@ -108,6 +113,7 @@ class HDTRLocal(Heuristic):
     name = "h_dtr_local"
     separable = True
     uses_staleness = True
+    cost_aware = True
 
     def score(self, rt, s) -> float:
         return s.local_cost / (s.size * rt.staleness(s))
@@ -143,6 +149,7 @@ class HMSPS(Heuristic):
     """MSPS: rematerialization cost over evicted *ancestors*, per byte."""
     name = "h_msps"
     separable = True
+    cost_aware = True
 
     def score(self, rt, s) -> float:
         c = s.local_cost + rt.evicted_ancestor_cost(s)
@@ -172,6 +179,7 @@ class HEStar(Heuristic):
     """
     name = "h_estar"
     separable = True
+    cost_aware = True
 
     def score(self, rt, s) -> float:
         return (s.local_cost + s.dead_cost
@@ -196,6 +204,7 @@ class HAblation(Heuristic):
         self.stale, self.mem, self.cost = stale, mem, cost
         self.needs_uf = cost == "eq"
         self.uses_staleness = stale
+        self.cost_aware = cost != "no"
         self.name = (f"h_s{'1' if stale else '0'}"
                      f"m{'1' if mem else '0'}c_{cost}")
 

@@ -83,6 +83,11 @@ class StorageRec:
     pinned: bool = False            # constant or banish-pinned: unevictable
     banished: bool = False
     constant: bool = False
+    offloaded: bool = False         # bytes live on the host tier (contents
+    #                                 preserved; fetched back on access —
+    #                                 NOT an evicted-set member: offloaded
+    #                                 storages never join evicted components
+    #                                 or e*/ẽ* walks, they transfer back)
     dead: bool = False              # no refs + every child dead/banished:
     #                                 never rematerialized again (pruned
     #                                 from evicted components and e* walks)
@@ -131,6 +136,9 @@ class DTRRuntime:
         compute_limit: float = float("inf"),
         allocator=None,                     # repro.alloc.PoolAllocator | None
         index: bool = True,                 # incremental eviction index
+        offload=None,                       # repro.offload.OffloadEngine | None
+        offload_fn: Optional[Callable] = None,  # eager hook: bytes -> host
+        fetch_fn: Optional[Callable] = None,    # eager hook: bytes -> device
     ) -> None:
         assert dealloc in ("ignore", "eager", "banish")
         self.budget = float(budget)
@@ -143,6 +151,11 @@ class DTRRuntime:
         self.materialize_fn = materialize_fn
         self.free_fn = free_fn
         self.compute_limit = float(compute_limit)
+        # Optional host offload tier (repro.offload).  None => pure DTR:
+        # every code path below is bit-exact with pre-offload engines.
+        self.offload = offload
+        self.offload_fn = offload_fn
+        self.fetch_fn = fetch_fn
 
         self.tensors: dict[int, TensorRec] = {}
         self.storages: dict[int, StorageRec] = {}
@@ -156,9 +169,15 @@ class DTRRuntime:
         self.peak_memory = 0.0
         self.total_compute = 0.0        # includes rematerializations
         self.base_compute = 0.0         # first executions only
+        self.stall_time = 0.0           # clock spent waiting on transfers
         self.ops_executed = 0           # op (re)plays, unit counting for Thm 3.1
         self.remat_ops = 0
         self.evictions = 0
+        self.offloads = 0               # victims moved to host, not dropped
+        self.fetches = 0                # synchronous fetch-backs (misses)
+        self.prefetch_hits = 0          # accesses served by a prefetch-back
+        self.prefetch_issued = 0
+        self.prefetch_cancelled = 0
         self.meta_accesses = 0          # Appendix D.3 accounting
         self.victim_picks = 0           # victim selections (flush events)
         self._pending_banish: set[int] = set()
@@ -265,6 +284,11 @@ class DTRRuntime:
                     # A new external view revives a pruned storage: it
                     # rejoins the evicted components with its grown cost.
                     self._revive(s)
+                elif s.offloaded:
+                    # Offloaded storages sit in no evicted component: only
+                    # their own cached key holds the pre-view cost.
+                    if self.index is not None:
+                        self.index.mark_dirty(s.sid)
                 elif not s.resident and not s.banished:
                     # Cached closures summing this evicted storage hold the
                     # pre-view cost: drop them (scoped to its component).
@@ -367,6 +391,15 @@ class DTRRuntime:
     def slowdown(self) -> float:
         return self.total_compute / max(self.base_compute, 1e-12)
 
+    def overhead(self) -> float:
+        """Compute + transfer-stall overhead over the baseline compute.
+
+        Equals ``slowdown()`` without an offload tier (stalls only come
+        from fetch-backs); with one, it is the honest end-to-end cost the
+        offload benchmarks compare across policies."""
+        return ((self.total_compute + self.stall_time)
+                / max(self.base_compute, 1e-12))
+
     def fragmentation(self):
         """Allocator telemetry (``repro.alloc.FragStats``), None in counter mode."""
         return self.allocator.stats() if self.allocator is not None else None
@@ -408,6 +441,15 @@ class DTRRuntime:
                     if s.banished:
                         raise BanishedError(
                             f"access to banished tensor {t.name}")
+                    if s.offloaded:
+                        # Contents live on host: fetch them back (stalling
+                        # on the transfer, or collecting a prefetch) and
+                        # restore the views defined at offload time.  Views
+                        # created/evicted since then fall through to the
+                        # normal remat path below, now with the storage
+                        # resident.
+                        self._fetch_in(s)
+                        continue
                     op = t.op
                     if op is None:
                         raise BanishedError(f"constant {t.name} unavailable")
@@ -455,13 +497,19 @@ class DTRRuntime:
             # Inputs are accessed by this op: update staleness metadata.
             for sid in in_sids:
                 self.storages[sid].last_access = self.clock
+            if self.offload is not None:
+                for sid in in_sids:
+                    self.offload.note_access(sid, self.clock)
             out_storages: list[StorageRec] = []
             for tid in op.output_tids:
                 t = self.tensors[tid]
                 s = self.storages[t.sid]
                 if s.banished:
                     continue
-                if not t.is_alias and not s.resident:
+                # Offloaded output storages are skipped: their contents are
+                # intact on host, so this replay must not re-place them
+                # (their undefined views are restored by a later fetch).
+                if not t.is_alias and not s.resident and not s.offloaded:
                     out_storages.append(s)
             self._alloc_storages(out_storages,
                                  exclude={s.sid for s in out_storages})
@@ -502,6 +550,8 @@ class DTRRuntime:
                     s = self.storages[sid]
                     if s.refs <= 0 and not s.banished:
                         self._try_banish(s)
+            if self.offload is not None:
+                self.offload.pump(self)
         finally:
             for sid in in_sids:
                 self.storages[sid].locks -= 1
@@ -547,11 +597,17 @@ class DTRRuntime:
             return
         while self.memory + need > self.budget:
             victim = self._pick_victim(exclude)
-            if victim is None:
-                raise OOMError(
-                    f"cannot free {need} bytes (resident={self.memory}, "
-                    f"budget={self.budget})")
-            self._evict(victim)
+            if victim is not None:
+                self._evict_or_offload(victim)
+                continue
+            # Before declaring OOM, reclaim in-flight prefetch
+            # reservations (they hold device bytes speculatively).
+            if (self.offload is not None
+                    and self.offload.cancel_one_prefetch(self)):
+                continue
+            raise OOMError(
+                f"cannot free {need} bytes (resident={self.memory}, "
+                f"budget={self.budget})")
         self.memory += need
         self.peak_memory = max(self.peak_memory, self.memory)
 
@@ -619,6 +675,82 @@ class DTRRuntime:
             self._uf_detach(s)
 
     # ------------------------------------------------------------------
+    # Host offload tier (repro.offload)
+    # ------------------------------------------------------------------
+    def _evict_or_offload(self, s: StorageRec) -> None:
+        """Free the victim's device bytes by the cheaper mechanism.
+
+        The two-choice policy (``OffloadEngine.wants_offload``) compares
+        round-trip transfer cost against the heuristic's recompute cost;
+        without an engine this is exactly ``_evict``.
+        """
+        if self.offload is not None and self.offload.wants_offload(self, s):
+            self._offload(s)
+        else:
+            self._evict(s)
+
+    def _offload(self, s: StorageRec) -> None:
+        """Move ``s``'s bytes to the host tier (contents preserved).
+
+        The device block frees immediately (the D2H copy-out proceeds in
+        the background on the simulated clock; a fetch-back cannot start
+        before it lands).  Unlike eviction, nothing here touches the
+        evicted components: an offloaded storage needs no remat, so
+        neighboring e*/ẽ* closures are unchanged.
+        """
+        assert s.evictable(), f"offloading unevictable storage {s.sid}"
+        defined = tuple(tid for tid in s.tensor_tids
+                        if self.tensors[tid].defined)
+        s.offloaded = True
+        s.resident = False              # index membership exits here
+        for tid in s.tensor_tids:
+            self.tensors[tid].defined = False
+        self.memory -= s.size
+        self.offloads += 1
+        if self.allocator is not None:
+            self.allocator.free(s)
+        self.offload.on_offload(self, s, defined)
+        if self.offload_fn is not None:
+            self.offload_fn(s, defined)
+
+    def _fetch_in(self, s: StorageRec) -> None:
+        """Bring an offloaded storage back to device (access miss path).
+
+        A completed/in-flight prefetch already holds a device reservation:
+        the access stalls only until its arrival time.  Otherwise device
+        space is allocated now (evicting/offloading further victims if
+        needed) and the clock stalls for the full synchronous H2D copy.
+        """
+        eng = self.offload
+        if eng.in_flight(s.sid):
+            rec = eng._recs[s.sid]
+            stall = rec.ready_at - self.clock
+            self.prefetch_hits += 1
+        else:
+            self._alloc_storages([s], exclude={s.sid})
+            stall = eng.begin_fetch(self, s)
+            self.fetches += 1
+        if stall > 0:
+            self._stall(stall)
+        defined = eng.finish_fetch(self, s)
+        s.offloaded = False
+        s.resident = True               # index membership re-enters here
+        for tid in defined:
+            self.tensors[tid].defined = True
+        s.last_access = self.clock
+        if self.fetch_fn is not None:
+            self.fetch_fn(s, defined)
+
+    def _stall(self, dt: float) -> None:
+        """Advance the clock waiting on a transfer (no compute charged)."""
+        self.clock += dt
+        self.stall_time += dt
+        if self.total_compute + self.stall_time > self.compute_limit:
+            raise ThrashError(
+                f"compute+stall {self.total_compute + self.stall_time:.3g} "
+                f"exceeded thrash limit {self.compute_limit:.3g}")
+
+    # ------------------------------------------------------------------
     # Evicted-component maintenance (h_dtr_eq's equivalence classes)
     # ------------------------------------------------------------------
     def _uf_join(self, s: StorageRec) -> None:
@@ -647,7 +779,7 @@ class DTRRuntime:
             mem.append(s.sid)
         for nsid in s.deps | s.children:
             ns = self.storages[nsid]
-            if not ns.resident and not ns.banished:
+            if not ns.resident and not ns.banished and not ns.offloaded:
                 r1 = uf.find(ns.uf)
                 if r1 == r:
                     continue
@@ -785,7 +917,17 @@ class DTRRuntime:
 
     def _kill(self, x: StorageRec) -> None:
         x.dead = True
-        if not x.resident and not x.banished:
+        if x.offloaded:
+            # A dead host copy can never be fetched again: drop it (and
+            # any in-flight prefetch reservation).  The storage was never
+            # an evicted-component member, so no invalidation beyond its
+            # own key is needed.
+            self.offload.drop(self, x)
+            if self.free_fn is not None:
+                self.free_fn(x)      # eager hook: discard the host copy too
+            if self.index is not None:
+                self.index.mark_dirty(x.sid)
+        elif not x.resident and not x.banished:
             # x leaves the exact e* closures (walks prune the dead):
             # cached values that summed it are stale.  Its ẽ* component
             # membership is deliberately kept — dead members stay cost
@@ -820,7 +962,12 @@ class DTRRuntime:
             if host.dead or host.banished or host.pinned or host.constant:
                 continue
             host.dead_cost += transfer
-            if not host.resident:
+            if host.offloaded:
+                # Offloaded host: no closure ever sums it; only its own
+                # key carries the new weight.
+                if self.index is not None:
+                    self.index.mark_dirty(host.sid)
+            elif not host.resident:
                 # Cached e* closures that summed ``host`` hold its old
                 # effective cost; adjacency is unchanged (sum-only).  The
                 # ẽ* component sums are untouched: the cone's members
@@ -851,7 +998,7 @@ class DTRRuntime:
             if not x.dead:
                 continue
             x.dead = False
-            if not x.resident and not x.banished:
+            if not x.resident and not x.banished and not x.offloaded:
                 self._invalidator.on_evict(x)
                 if self.uf is not None and not x.uf_joined:
                     self._uf_join(x)
@@ -864,10 +1011,19 @@ class DTRRuntime:
         # so they must not block the banish forever.
         for csid in s.children:
             c = self.storages[csid]
-            if not c.resident and not c.banished and not c.dead:
+            # Offloaded children need no remat (they fetch back), so they
+            # never block a banish.
+            if (not c.resident and not c.banished and not c.dead
+                    and not c.offloaded):
                 self._pending_banish.add(s.sid)
                 return
         self._pending_banish.discard(s.sid)
+        if s.offloaded:
+            # Banish drops the host copy too: permanent free means the
+            # bytes are gone from every tier.
+            self.offload.drop(self, s)
+            if self.free_fn is not None:
+                self.free_fn(s)
         if s.resident:
             self.memory -= s.size
             for tid in s.tensor_tids:
@@ -1018,7 +1174,7 @@ class DTRRuntime:
         # of ẽ* by construction.
         for nsid in sorted(s.deps | s.children):
             ns = self.storages[nsid]
-            if not ns.resident and not ns.banished:
+            if not ns.resident and not ns.banished and not ns.offloaded:
                 r = uf.find(ns.uf)
                 self.meta_accesses += 1
                 subscribe(nsid, s.sid)
@@ -1032,4 +1188,5 @@ class DTRRuntime:
 
     def _is_evicted(self, sid: int) -> bool:
         s = self.storages[sid]
-        return not s.resident and not s.banished and not s.dead
+        return (not s.resident and not s.banished and not s.dead
+                and not s.offloaded)

@@ -11,6 +11,14 @@ address space requiring contiguous fits with window eviction
 (``repro.alloc``); ``"pool_nofrag"`` keeps counter semantics bit-for-bit but
 tracks block placement for fragmentation telemetry.
 
+``alloc_mode="pool+host"`` stacks the hybrid offload tier
+(``repro.offload``) on the contiguous pool: pass ``offload=OffloadConfig(...)``
+with a positive ``host_budget`` and victims are either evicted (recompute
+later) or offloaded to a capacity-bounded host tier over modeled transfer
+channels, whichever is cheaper, with async prefetch-back.  ``offload`` also
+composes with the other alloc modes; ``pool+host`` merely makes the pairing
+explicit and refuses to run without an enabled config.
+
 ``index`` toggles the incremental eviction index
 (``repro.core.evict_index``); ``index=False`` runs the linear-scan oracle.
 Both produce identical eviction decisions (only ``meta_accesses`` may
@@ -20,13 +28,15 @@ differ); large sweeps additionally parallelize across processes with
 from __future__ import annotations
 
 import os
+import shutil
+import tempfile
 from dataclasses import dataclass, field
 
 from .graph import Log, replay
 from .heuristics import Heuristic, by_name
 from .runtime import DTRRuntime, OOMError, ThrashError
 
-ALLOC_MODES = ("counter", "pool", "pool_nofrag")
+ALLOC_MODES = ("counter", "pool", "pool_nofrag", "pool+host")
 
 
 @dataclass
@@ -47,6 +57,15 @@ class RunResult:
     frag_ratio: float = 0.0
     failed_fits: int = 0
     evict_windows: int = 0
+    # Offload-tier telemetry (repro.offload; zeros without a host tier).
+    stall_time: float = 0.0
+    offloads: int = 0
+    fetches: int = 0
+    prefetch_hits: int = 0
+    prefetch_cancelled: int = 0
+    host_peak: float = 0.0
+    # (compute + transfer stalls) / base_compute; slowdown counts compute only.
+    overhead: float = float("inf")
 
 
 def make_allocator(alloc_mode: str | None, placement: str = "best_fit"):
@@ -54,7 +73,7 @@ def make_allocator(alloc_mode: str | None, placement: str = "best_fit"):
     if alloc_mode in (None, "counter"):
         return None
     from ..alloc import PoolAllocator
-    if alloc_mode == "pool":
+    if alloc_mode in ("pool", "pool+host"):
         return PoolAllocator(placement=placement, contiguous=True)
     if alloc_mode == "pool_nofrag":
         return PoolAllocator(placement=placement, contiguous=False)
@@ -79,14 +98,21 @@ def result_from_runtime(rt: DTRRuntime, budget: float, ok: bool,
     trace subsystem's ``run_trace`` both build their results here, so the
     two report paths cannot drift.
     """
+    eng = rt.offload
     return RunResult(
         budget=budget, ok=ok, error=error,
         slowdown=rt.slowdown() if ok else float("inf"),
+        overhead=rt.overhead() if ok else float("inf"),
         compute=rt.total_compute, base_compute=rt.base_compute,
         evictions=rt.evictions, remat_ops=rt.remat_ops,
         ops_executed=rt.ops_executed,
         meta_accesses=rt.meta_accesses + (rt.uf.accesses if rt.uf else 0),
-        peak_memory=rt.peak_memory, **_frag_fields(rt))
+        peak_memory=rt.peak_memory,
+        stall_time=rt.stall_time, offloads=rt.offloads, fetches=rt.fetches,
+        prefetch_hits=rt.prefetch_hits,
+        prefetch_cancelled=rt.prefetch_cancelled,
+        host_peak=eng.host.peak if eng is not None else 0.0,
+        **_frag_fields(rt))
 
 
 @dataclass
@@ -139,14 +165,23 @@ def simulate(
     alloc_mode: str | None = None,
     placement: str = "best_fit",
     index: bool = True,
+    offload=None,
 ) -> RunResult:
     h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
+    engine = None
+    if offload is not None and offload.enabled:
+        from ..offload import OffloadEngine, wrap_heuristic
+        engine = OffloadEngine(offload)
+        h = wrap_heuristic(h, engine)
+    if alloc_mode == "pool+host" and engine is None:
+        raise ValueError("alloc_mode='pool+host' requires an enabled "
+                         "OffloadConfig (host_budget > 0)")
     rt = DTRRuntime(budget=budget, heuristic=h, dealloc=dealloc,
                     ignore_small_frac=ignore_small_frac,
                     sample_sqrt=sample_sqrt, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
                     allocator=make_allocator(alloc_mode, placement),
-                    index=index)
+                    index=index, offload=engine)
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
@@ -165,6 +200,7 @@ def sweep(
     index: bool = True,
     budget_mode: str = "peak",
     thrash_factor: float = 50.0,
+    offload=None,
 ) -> SweepResult:
     peak, _ = measure_baseline(log)
     pinned = log.pinned_bytes()
@@ -177,7 +213,7 @@ def sweep(
                      budget=resolve_budget(f, peak, pinned, budget_mode),
                      dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
                      placement=placement, index=index,
-                     thrash_factor=thrash_factor))
+                     thrash_factor=thrash_factor, offload=offload))
         out.runs[-1].budget = f  # report as fraction
     return out
 
@@ -186,17 +222,34 @@ def sweep(
 # Process-parallel sweep driver
 # ---------------------------------------------------------------------------
 
+#: Per-process parsed-log cache for sweep workers, keyed by the spill
+#: file path.  Each worker parses a given log once and reuses it for every
+#: grid cell it draws — instead of shipping (and re-parsing) the log's full
+#: JSON-lines text inside every task payload.
+_LOG_CACHE: dict[tuple[str, str], Log] = {}
+
+
+def _cached_log(path: str, name: str) -> Log:
+    key = (path, name)
+    log = _LOG_CACHE.get(key)
+    if log is None:
+        with open(path, "r", encoding="utf-8") as f:
+            log = Log.loads(f.read(), name=name)
+        _LOG_CACHE[key] = log
+    return log
+
+
 def _simulate_task(payload: tuple) -> RunResult:
-    """Worker: one (log, heuristic, fraction) cell.  Logs travel as their
-    JSON-lines serialization so the payload pickles cheaply and
-    deterministically on every start method."""
-    (text, name, heuristic, budget, frac, dealloc, seed, alloc_mode,
-     placement, index, thrash_factor) = payload
-    log = Log.loads(text, name=name)
+    """Worker: one (log, heuristic, fraction) cell.  Logs are referenced by
+    spill-file path (see ``_cached_log``), so payloads stay tiny and pickle
+    cheaply and deterministically on every start method."""
+    (path, name, heuristic, budget, frac, dealloc, seed, alloc_mode,
+     placement, index, thrash_factor, offload) = payload
+    log = _cached_log(path, name)
     r = simulate(log, by_name(heuristic, seed), budget=budget,
                  dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
                  placement=placement, index=index,
-                 thrash_factor=thrash_factor)
+                 thrash_factor=thrash_factor, offload=offload)
     r.budget = frac  # report as fraction
     return r
 
@@ -213,6 +266,7 @@ def sweep_parallel(
     processes: int | None = None,
     budget_mode: str = "peak",
     thrash_factor: float = 50.0,
+    offload=None,
 ) -> list[SweepResult]:
     """Sweep the budgets × heuristics × models grid across processes.
 
@@ -229,35 +283,51 @@ def sweep_parallel(
     # Keyed positionally, not by log.name: duplicate names must not collide.
     baselines = [measure_baseline(log)[0] for log in logs]
     pinned = [log.pinned_bytes() for log in logs]
-    texts = [log.dumps() for log in logs]
     grid = [(i, h) for i in range(len(logs)) for h in heuristics]
-    payloads = [
-        (texts[i], logs[i].name, h,
-         resolve_budget(f, baselines[i], pinned[i], budget_mode), f,
-         dealloc, seed, alloc_mode, placement, index, thrash_factor)
-        for i, h in grid for f in fractions]
 
-    runs: list[RunResult] | None = None
-    if processes != 0 and len(payloads) > 1:
-        try:
-            from concurrent.futures import ProcessPoolExecutor
-            from concurrent.futures.process import BrokenProcessPool
-        except ImportError:
-            pass
-        else:
+    # Spill each log to a temp file once; payloads carry the path, workers
+    # parse on first touch and cache per process (``_cached_log``).
+    tmpdir = tempfile.mkdtemp(prefix="repro-sweep-")
+    try:
+        paths = []
+        for i, log in enumerate(logs):
+            path = os.path.join(tmpdir, f"log{i}.jsonl")
+            with open(path, "w", encoding="utf-8") as f:
+                f.write(log.dumps())
+            paths.append(path)
+        payloads = [
+            (paths[i], logs[i].name, h,
+             resolve_budget(f, baselines[i], pinned[i], budget_mode), f,
+             dealloc, seed, alloc_mode, placement, index, thrash_factor,
+             offload)
+            for i, h in grid for f in fractions]
+
+        runs: list[RunResult] | None = None
+        if processes != 0 and len(payloads) > 1:
             try:
-                workers = processes or min(len(payloads),
-                                           os.cpu_count() or 1)
-                with ProcessPoolExecutor(max_workers=workers) as pool:
-                    runs = list(pool.map(_simulate_task, payloads,
-                                         chunksize=1))
-            except (OSError, PermissionError, BrokenProcessPool):
-                # Pool bring-up failure or a killed worker (e.g. OOM): redo
-                # the whole grid serially — cells are deterministic, so
-                # results match an undisturbed parallel run.
-                runs = None
-    if runs is None:
-        runs = [_simulate_task(p) for p in payloads]
+                from concurrent.futures import ProcessPoolExecutor
+                from concurrent.futures.process import BrokenProcessPool
+            except ImportError:
+                pass
+            else:
+                try:
+                    workers = processes or min(len(payloads),
+                                               os.cpu_count() or 1)
+                    with ProcessPoolExecutor(max_workers=workers) as pool:
+                        runs = list(pool.map(_simulate_task, payloads,
+                                             chunksize=1))
+                except (OSError, PermissionError, BrokenProcessPool):
+                    # Pool bring-up failure or a killed worker (e.g. OOM):
+                    # redo the whole grid serially — cells are
+                    # deterministic, so results match an undisturbed
+                    # parallel run.
+                    runs = None
+        if runs is None:
+            runs = [_simulate_task(p) for p in payloads]
+    finally:
+        for key in [k for k in _LOG_CACHE if k[0].startswith(tmpdir)]:
+            del _LOG_CACHE[key]
+        shutil.rmtree(tmpdir, ignore_errors=True)
 
     out: list[SweepResult] = []
     it = iter(runs)

@@ -73,18 +73,35 @@ class DTRContext:
     def __init__(self, budget_bytes: float, heuristic: str = "h_dtr_eq",
                  dealloc: str = "eager", use_wallclock_cost: bool = True,
                  seed: int = 0, alloc_mode: str | None = None,
-                 placement: str = "best_fit", recorder=None):
+                 placement: str = "best_fit", recorder=None,
+                 offload=None):
         # alloc_mode="pool" maps the real JAX buffers onto simulated pool
         # accounting: every resident storage occupies a contiguous block and
         # memory pressure evicts contiguous windows (repro.alloc), so eager
         # runs report the fragmentation a real device allocator would see.
+        #
+        # ``offload`` (an enabled repro.offload.OffloadConfig, budgets and
+        # bandwidths in bytes / bytes-per-second) adds the host tier: under
+        # pressure, storages whose modeled round-trip transfer undercuts
+        # their recompute cost have their *actual buffers* moved to host
+        # memory (numpy) and brought back on access — contents preserved,
+        # no replay.
         from ..core.simulator import make_allocator
+        h = by_name(heuristic, seed)
+        engine = None
+        if offload is not None and offload.enabled:
+            from ..offload import OffloadEngine, wrap_heuristic
+            engine = OffloadEngine(offload)
+            h = wrap_heuristic(h, engine)
         self.rt = DTRRuntime(
-            budget=float(budget_bytes), heuristic=by_name(heuristic, seed),
+            budget=float(budget_bytes), heuristic=h,
             dealloc=dealloc,
             materialize_fn=self._on_perform, free_fn=self._on_free,
-            allocator=make_allocator(alloc_mode, placement))
+            allocator=make_allocator(alloc_mode, placement),
+            offload=engine, offload_fn=self._on_offload,
+            fetch_fn=self._on_fetch)
         self.buffers: dict[int, jax.Array] = {}     # tid -> concrete array
+        self.host_buffers: dict[int, np.ndarray] = {}  # tid -> offloaded copy
         self.closures: dict[int, Callable] = {}     # op_id -> replay fn
         self.use_wallclock_cost = use_wallclock_cost
         self._pending_outputs: list[jax.Array] | None = None
@@ -188,6 +205,27 @@ class DTRContext:
     def _on_free(self, storage) -> None:
         for tid in storage.tensor_tids:
             self.buffers.pop(tid, None)
+            self.host_buffers.pop(tid, None)
+
+    def _on_offload(self, storage, defined_tids) -> None:
+        """Move the storage's defined buffers to host memory (numpy)."""
+        for tid in defined_tids:
+            buf = self.buffers.pop(tid, None)
+            if buf is not None:
+                self.host_buffers[tid] = np.asarray(buf)
+        for tid in storage.tensor_tids:   # undefined views hold no bytes
+            self.buffers.pop(tid, None)
+
+    def _on_fetch(self, storage, defined_tids) -> None:
+        """Bring host copies back as device arrays (contents preserved)."""
+        for tid in defined_tids:
+            host = self.host_buffers.pop(tid, None)
+            if host is not None:
+                self.buffers[tid] = jnp.asarray(host)
+
+    def host_bytes(self) -> int:
+        """Actual bytes currently parked in host copies."""
+        return sum(int(b.nbytes) for b in self.host_buffers.values())
 
 
 def op(ctx: DTRContext, name: str, fn: Callable) -> Callable:

@@ -45,7 +45,27 @@ def main(argv=None):
     ap.add_argument("--capture", default=None, metavar="PATH",
                     help="record the executed operator stream as a DTR "
                          "trace log (repro.trace)")
+    ap.add_argument("--offload-sweep", action="store_true",
+                    help="after capture, replay the captured trace through "
+                         "the hybrid remat-or-offload tier (repro.offload): "
+                         "the per-slot KV chunks and activations become "
+                         "offload candidates (weights stay pinned)")
+    ap.add_argument("--device-fracs", nargs="+", type=float,
+                    default=[0.5, 0.3],
+                    help="device budgets, as fractions of the activation "
+                         "range (offload sweep)")
+    ap.add_argument("--host-fracs", nargs="+", type=float,
+                    default=[0.0, 0.5, 1.0],
+                    help="host-tier budgets, as fractions of the activation "
+                         "range; 0 = DTR-only baseline (offload sweep)")
+    ap.add_argument("--offload-bw", type=float, default=2.0,
+                    help="transfer bandwidth relative to the trace's "
+                         "characteristic bandwidth (peak bytes per unit "
+                         "baseline compute)")
     args = ap.parse_args(argv)
+    if args.offload_sweep and not args.capture:
+        ap.error("--offload-sweep needs --capture (it replays the "
+                 "captured trace)")
 
     tracer = None
     if args.capture:
@@ -162,6 +182,49 @@ def main(argv=None):
                 f.write(log.dumps() + "\n")
             print(f"captured trace {log.name}: {log.op_count()} ops "
                   f"-> {args.capture}")
+            if args.offload_sweep:
+                _offload_sweep(log, args.device_fracs, args.host_fracs,
+                               args.offload_bw)
+
+
+def _offload_sweep(log, device_fracs, host_fracs, bw_rel,
+                   heuristic="h_dtr_eq"):
+    """Replay a captured serve trace over a device × host budget grid.
+
+    The host tier gives the serving loop a second lever for its dominant
+    memory consumer: per-slot KV chunks (and layer activations) can be
+    parked in host memory over the modeled channels instead of being
+    recomputed, whichever the two-choice policy prices cheaper.  Budgets
+    scan the activation range (weights are pinned and cannot move);
+    ``host_frac=0`` is the plain DTR baseline.
+    """
+    from repro.core.simulator import (measure_baseline, resolve_budget,
+                                      simulate)
+    from repro.offload import OffloadConfig
+
+    peak, base_cost = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    span = max(peak - pinned, 0.0)
+    bw = bw_rel * peak / max(base_cost, 1e-12)
+    print(f"offload sweep [{log.name}]: peak={peak:.4g} pinned={pinned:.4g} "
+          f"bw={bw:.4g} bytes/unit-compute")
+    for f in device_fracs:
+        budget = resolve_budget(f, peak, pinned, "activation")
+        for hf in host_fracs:
+            if hf <= 0:
+                r = simulate(log, heuristic, budget)
+                tag = "dtr-only "
+            else:
+                cfg = OffloadConfig(host_budget=hf * span,
+                                    h2d_bandwidth=bw, d2h_bandwidth=bw)
+                r = simulate(log, heuristic, budget, offload=cfg)
+                tag = f"host={hf:.2f}"
+            state = (f"overhead={r.overhead:.3f} "
+                     f"(compute {r.slowdown:.3f}x, stall {r.stall_time:.3g}) "
+                     f"offloads={r.offloads} fetches={r.fetches} "
+                     f"prefetch_hits={r.prefetch_hits}"
+                     if r.ok else f"FAIL({r.error[:48]})")
+            print(f"  dev={f:.2f} {tag}: {state}")
 
 
 if __name__ == "__main__":

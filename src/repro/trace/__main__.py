@@ -132,7 +132,6 @@ def cmd_report(args) -> int:
     # train traces are too slow to re-verify on every report).  The verify
     # pass already replayed every index cell, so the budget curves are
     # assembled from its results instead of re-simulating the grid.
-    from dataclasses import asdict
     verified = [R.verify_oracle_equivalence(
         log, heuristics=tuple(args.heuristics),
         fractions=tuple(args.fractions),
@@ -151,7 +150,7 @@ def cmd_report(args) -> int:
                 "last_ok_before_thrash": min(
                     (r.budget for r in runs if r.ok and r.slowdown < 2.0),
                     default=None),
-                "runs": [asdict(r) for r in runs],
+                "runs": [R.run_to_dict(r) for r in runs],
             })
     report = {
         "traces": [{"name": log.name, "ops": log.op_count(),
@@ -162,7 +161,9 @@ def cmd_report(args) -> int:
         "curves": curves,
     }
     with open(args.out, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
+        # allow_nan=False: strict JSON only.  Failed runs carry ok=False
+        # with nulled slowdown/overhead (run_to_dict), never ``Infinity``.
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
     ok = report["equivalence_failures"] == 0
     print(f"report: {len(logs)} traces x {len(args.heuristics)} heuristics "
           f"x {len(args.fractions)} fractions -> {args.out} "

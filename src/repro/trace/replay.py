@@ -33,12 +33,25 @@ DEFAULT_FRACTIONS = (0.9, 0.7, 0.5, 0.4, 0.3)
 
 def run_trace(log: Log, heuristic: str, budget: float, *,
               dealloc: str = "eager", index: bool = True, seed: int = 0,
-              thrash_factor: float = 50.0):
-    """Replay ``log`` once; returns (RunResult, victim sid sequence)."""
-    rt = DTRRuntime(budget=budget, heuristic=by_name(heuristic, seed),
+              thrash_factor: float = 50.0, offload=None):
+    """Replay ``log`` once; returns (RunResult, victim sid sequence).
+
+    ``offload`` (an enabled ``repro.offload.OffloadConfig``) attaches the
+    hybrid host tier; the victim sequence then records *evictions* only
+    (offloads preserve contents, so they are not decisions the golden
+    digests pin).  ``host_budget=0`` configs are ignored — bit-exact with
+    the plain replay.
+    """
+    h = by_name(heuristic, seed)
+    engine = None
+    if offload is not None and offload.enabled:
+        from ..offload import OffloadEngine, wrap_heuristic
+        engine = OffloadEngine(offload)
+        h = wrap_heuristic(h, engine)
+    rt = DTRRuntime(budget=budget, heuristic=h,
                     dealloc=dealloc, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
-                    index=index)
+                    index=index, offload=engine)
     victims: list[int] = []
     inner = rt._evict
 
@@ -59,14 +72,17 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
 #: oracle (meta_accesses legitimately differs: that is the point of the
 #: index).
 PARITY_FIELDS = ("ok", "evictions", "remat_ops", "ops_executed",
-                 "compute", "base_compute", "peak_memory", "slowdown")
+                 "compute", "base_compute", "peak_memory", "slowdown",
+                 "stall_time", "offloads", "fetches", "prefetch_hits",
+                 "overhead")
 
 
 def verify_oracle_equivalence(log: Log, *, heuristics=SEPARABLE,
                               fractions=DEFAULT_FRACTIONS,
                               dealloc: str = "eager",
                               budget_mode: str = "activation",
-                              thrash_factor: float = 50.0) -> dict:
+                              thrash_factor: float = 50.0,
+                              offload=None) -> dict:
     """Index-vs-scan bit-exactness over a fraction × heuristic grid.
 
     Budgets default to the activation range (``pinned + f * (peak -
@@ -86,10 +102,10 @@ def verify_oracle_equivalence(log: Log, *, heuristics=SEPARABLE,
             budget = resolve_budget(f, peak, pinned, budget_mode)
             scan_res, scan_victims = run_trace(
                 log, h, budget, dealloc=dealloc, index=False,
-                thrash_factor=thrash_factor)
+                thrash_factor=thrash_factor, offload=offload)
             idx_res, idx_victims = run_trace(
                 log, h, budget, dealloc=dealloc, index=True,
-                thrash_factor=thrash_factor)
+                thrash_factor=thrash_factor, offload=offload)
             idx_res.budget = f  # report as fraction (sweep convention)
             index_results[(h, f)] = idx_res
             bad = [fld for fld in PARITY_FIELDS
@@ -108,12 +124,46 @@ def verify_oracle_equivalence(log: Log, *, heuristics=SEPARABLE,
             "index_results": index_results}
 
 
+def _finite(x):
+    """JSON-safe scalar: non-finite floats become None (strict JSON has no
+    Infinity/NaN literals, and downstream plotters choke on the informal
+    extensions ``json.dump`` emits by default)."""
+    if isinstance(x, float) and (x != x or x in (float("inf"),
+                                                 float("-inf"))):
+        return None
+    return x
+
+
+def run_to_dict(r: RunResult) -> dict:
+    """``asdict`` with non-finite floats nulled (``ok`` already encodes
+    failure; an infinite slowdown/overhead carries no extra information)."""
+    return {k: _finite(v) for k, v in asdict(r).items()}
+
+
+def _reject_nonfinite(value: str):
+    raise ValueError(
+        f"non-finite literal {value!r} in report JSON; regenerate it with "
+        f"repro.trace (non-finite fields are serialized as null)")
+
+
+def load_report(path) -> dict | list:
+    """Load a benchmark/report JSON, rejecting Infinity/NaN literals.
+
+    The CI report-validation step loads every committed BENCH_*.json
+    through this, so the informal extensions Python's encoder used to leak
+    (``Infinity``) can never land in the repo again."""
+    import json
+    with open(path, "r", encoding="utf-8") as f:
+        return json.load(f, parse_constant=_reject_nonfinite)
+
+
 def replay_budget_curve(logs, *, heuristics=("h_dtr", "h_dtr_eq", "h_lru"),
                         fractions=DEFAULT_FRACTIONS, dealloc: str = "eager",
                         index: bool = True, processes: int | None = None,
                         alloc_mode: str | None = None,
                         budget_mode: str = "activation",
-                        thrash_factor: float = 50.0) -> list[dict]:
+                        thrash_factor: float = 50.0,
+                        offload=None) -> list[dict]:
     """Budget curves for captured traces via the parallel sweep driver.
 
     One entry per (trace, heuristic): budget fraction -> slowdown / remat /
@@ -125,7 +175,7 @@ def replay_budget_curve(logs, *, heuristics=("h_dtr", "h_dtr_eq", "h_lru"),
                             dealloc=dealloc, index=index,
                             alloc_mode=alloc_mode, processes=processes,
                             budget_mode=budget_mode,
-                            thrash_factor=thrash_factor)
+                            thrash_factor=thrash_factor, offload=offload)
     out = []
     for sw in sweeps:
         out.append({
@@ -135,7 +185,7 @@ def replay_budget_curve(logs, *, heuristics=("h_dtr", "h_dtr_eq", "h_lru"),
             "min_feasible_fraction": min(
                 (r.budget for r in sw.runs if r.ok), default=None),
             "last_ok_before_thrash": sw.last_ok_before_thrash(),
-            "runs": [asdict(r) for r in sw.runs],
+            "runs": [run_to_dict(r) for r in sw.runs],
         })
     return out
 
