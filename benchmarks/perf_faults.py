@@ -1,0 +1,278 @@
+"""Fault-injection benchmark (``BENCH_faults.json``).
+
+Replays the golden trace corpus (``tests/traces``) under the
+``repro.faults`` chaos schedules and the runtime's graceful-degradation
+ladder, over a fault-profile × fault-rate × budget grid:
+
+  * ``alloc``    — transient allocator admission failures (the ladder's
+    headroom-eviction recovery must absorb every one: alloc faults alone
+    can never kill a run);
+  * ``cost``     — lognormal per-operator charged-cost misestimation
+    (heuristics keep scoring the unperturbed estimates);
+  * ``squeeze``  — a square-wave co-tenant stealing device memory
+    mid-run (budget shrink/restore);
+  * ``transfer`` — flaky/contended H2D+D2H channels: faults retried with
+    capped exponential backoff, latency spikes, lost prefetches (runs
+    with the hybrid offload tier attached, else channels never move);
+  * ``mixed``    — all of the above at once.
+
+Figures of merit per (profile, rate): **survival** (fraction of cells
+finishing, ok or recovered) and **degraded overhead** (mean overhead of
+surviving cells vs the same cells fault-free).
+
+``--smoke`` runs the CI gate:
+
+  1. *zero-rate bit-exactness* — attaching an all-rates-zero
+     ``FaultConfig`` replays every smoke trace with victim sequences and
+     counters identical to a plain run (fault machinery off == absent);
+  2. *zero unrecovered failures at the pinned cells* — alloc and cost
+     profiles at the pinned rates must survive via the recovery ladder;
+  3. *determinism* — a pinned mixed-profile schedule produces identical
+     victims, degradation counts, and event streams across two runs and
+     across the scan/index engines.
+
+Emits ``BENCH_faults.json``::
+
+    {"gates": {...}, "rows": [...], "survival": [...], "smoke": bool}
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.graph import Log
+from repro.core.simulator import measure_baseline, resolve_budget, simulate
+from repro.faults import FaultConfig, RecoveryConfig
+from repro.offload import OffloadConfig
+from repro.trace.replay import PARITY_FIELDS, run_to_dict, run_trace
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "tests", "traces")
+GOLDEN = ("treelstm", "random_dag", "serve_smoke_s4", "train_smoke")
+SMOKE_GOLDEN = ("treelstm", "random_dag")
+
+HEURISTIC = "h_dtr_eq"
+THRASH = 10.0
+PROFILES = ("alloc", "cost", "squeeze", "transfer", "mixed")
+
+#: CI gate cells: (trace, profile, rate, budget fraction).  Alloc faults
+#: are recoverable by construction (the ladder retries the admission);
+#: small cost noise moves charged compute but not feasibility.  Zero
+#: unrecovered failures here is the hard smoke gate.
+PINNED_CELLS = (
+    ("treelstm", "alloc", 0.10, 0.6),
+    ("random_dag", "alloc", 0.10, 0.6),
+    ("treelstm", "cost", 0.02, 0.6),
+    ("random_dag", "cost", 0.02, 0.6),
+)
+#: Determinism gate: a mixed schedule on this cell must replay
+#: bit-identically (victims + events) across runs and engines.
+DETERMINISM_CELL = ("treelstm", "mixed", 0.05, 0.6)
+
+
+def _golden(name: str) -> Log:
+    with open(os.path.join(TRACES_DIR, name + ".log")) as f:
+        return Log.loads(f.read(), name=name)
+
+
+def profile_config(profile: str, rate: float, seed: int = 0) -> FaultConfig:
+    """Map a scalar rate onto one fault profile's FaultConfig."""
+    if profile == "alloc":
+        return FaultConfig(seed=seed, alloc_rate=rate)
+    if profile == "cost":
+        return FaultConfig(seed=seed, cost_noise=rate)
+    if profile == "squeeze":
+        return FaultConfig(seed=seed, budget_shrink=min(2 * rate, 0.9),
+                           budget_period=64)
+    if profile == "transfer":
+        return FaultConfig(seed=seed, transfer_rate=rate, spike_rate=rate,
+                           prefetch_rate=rate)
+    if profile == "mixed":
+        return FaultConfig(seed=seed, alloc_rate=rate, transfer_rate=rate,
+                           spike_rate=rate, prefetch_rate=rate,
+                           cost_noise=rate / 2,
+                           budget_shrink=min(rate, 0.5), budget_period=64)
+    raise ValueError(f"unknown fault profile {profile!r}")
+
+
+def _offload_for(profile: str, peak: float, pinned: float, cost: float):
+    """Transfer-class faults need channels to fault: attach the hybrid
+    tier for the profiles that rate them."""
+    if profile not in ("transfer", "mixed"):
+        return None
+    span = max(peak - pinned, 0.0)
+    bw = 2.0 * peak / max(cost, 1e-12)
+    return OffloadConfig(host_budget=span, h2d_bandwidth=bw,
+                         d2h_bandwidth=bw)
+
+
+def _cell(log, profile, rate, budget, peak, pinned, cost, seed=0):
+    cfg = profile_config(profile, rate, seed) if rate > 0 else None
+    off = _offload_for(profile, peak, pinned, cost)
+    return simulate(log, HEURISTIC, budget, thrash_factor=THRASH,
+                    offload=off, faults=cfg,
+                    recovery=RecoveryConfig() if cfg is not None else None)
+
+
+def run_grid(smoke: bool = False) -> list[dict]:
+    traces = SMOKE_GOLDEN if smoke else GOLDEN
+    rates = (0.0, 0.05) if smoke else (0.0, 0.02, 0.1)
+    fracs = (0.6,) if smoke else (0.7, 0.5)
+    rows: list[dict] = []
+    for name in traces:
+        log = _golden(name)
+        peak, cost = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        for frac in fracs:
+            budget = resolve_budget(frac, peak, pinned, "activation")
+            for profile in PROFILES:
+                for rate in rates:
+                    r = _cell(log, profile, rate, budget, peak, pinned,
+                              cost)
+                    rows.append({"trace": name, "profile": profile,
+                                 "rate": rate, "fraction": frac,
+                                 **run_to_dict(r)})
+    return rows
+
+
+def survival(rows: list[dict]) -> list[dict]:
+    """Survival fraction + degraded overhead per (profile, rate)."""
+    cells: dict[tuple, list[dict]] = {}
+    base: dict[tuple, dict] = {}
+    for r in rows:
+        if r["rate"] == 0.0:
+            base[(r["trace"], r["profile"], r["fraction"])] = r
+        cells.setdefault((r["profile"], r["rate"]), []).append(r)
+    out = []
+    for (profile, rate), rs in sorted(cells.items()):
+        if rate == 0.0:
+            continue
+        ok = [r for r in rs if r["ok"]]
+        ratios = []
+        for r in ok:
+            b = base.get((r["trace"], r["profile"], r["fraction"]))
+            if b and b["ok"] and b["overhead"]:
+                ratios.append(r["overhead"] / b["overhead"])
+        out.append({
+            "profile": profile, "rate": rate, "cells": len(rs),
+            "survived": len(ok),
+            "survival": round(len(ok) / max(len(rs), 1), 4),
+            "degradations": sum(r["degradations"] for r in rs),
+            "mean_overhead_ratio": round(sum(ratios) / len(ratios), 4)
+            if ratios else None})
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Smoke gates
+# ---------------------------------------------------------------------------
+
+def gate_zero_rate_exact() -> dict:
+    """Attaching an all-zero FaultConfig must be bit-exact with no config."""
+    cells, ok = [], True
+    zero = FaultConfig(seed=3)   # every rate 0 -> schedule never attaches
+    for name in SMOKE_GOLDEN:
+        log = _golden(name)
+        peak, _ = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        for frac in (0.8, 0.5):
+            budget = resolve_budget(frac, peak, pinned, "activation")
+            plain_res, plain_vic = run_trace(log, HEURISTIC, budget,
+                                             thrash_factor=THRASH)
+            zero_res, zero_vic = run_trace(log, HEURISTIC, budget,
+                                           thrash_factor=THRASH,
+                                           faults=zero)
+            bad = [f for f in PARITY_FIELDS
+                   if getattr(plain_res, f) != getattr(zero_res, f)]
+            if plain_vic != zero_vic:
+                bad.append("victims")
+            if zero_res.degradations or zero_res.events:
+                bad.append("spurious_events")
+            ok = ok and not bad
+            cells.append({"trace": name, "fraction": frac,
+                          "mismatches": bad})
+    return {"ok": ok, "cells": cells}
+
+
+def gate_pinned_survival(rows: list[dict]) -> dict:
+    """Zero unrecovered failures at the pinned smoke cells."""
+    cells, ok = [], True
+    for trace, profile, rate, frac in PINNED_CELLS:
+        log = _golden(trace)
+        peak, cost = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        budget = resolve_budget(frac, peak, pinned, "activation")
+        r = _cell(log, profile, rate, budget, peak, pinned, cost)
+        ok = ok and r.ok
+        cells.append({"trace": trace, "profile": profile, "rate": rate,
+                      "fraction": frac, "ok": r.ok,
+                      "degradations": r.degradations,
+                      "error": r.error[:80]})
+    return {"ok": ok, "cells": cells}
+
+
+def gate_determinism() -> dict:
+    """Pinned mixed schedule: identical across runs and engines."""
+    trace, profile, rate, frac = DETERMINISM_CELL
+    log = _golden(trace)
+    peak, cost = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    budget = resolve_budget(frac, peak, pinned, "activation")
+    cfg = profile_config(profile, rate)
+    off = _offload_for(profile, peak, pinned, cost)
+    runs = [run_trace(log, HEURISTIC, budget, thrash_factor=THRASH,
+                      offload=off, faults=cfg, recovery=RecoveryConfig(),
+                      index=idx) for idx in (True, True, False)]
+    (r1, v1), (r2, v2), (r3, v3) = runs
+    repeat_ok = (v1 == v2 and r1.events == r2.events
+                 and r1.degradations == r2.degradations)
+    engine_ok = (v1 == v3 and r1.events == r3.events
+                 and all(getattr(r1, f) == getattr(r3, f)
+                         for f in PARITY_FIELDS))
+    return {"ok": repeat_ok and engine_ok, "repeat_ok": repeat_ok,
+            "engine_ok": engine_ok, "cell": list(DETERMINISM_CELL),
+            "victims": len(v1), "events": len(r1.events),
+            "degradations": r1.degradations}
+
+
+def run(smoke: bool = False, out: str = "BENCH_faults.json") -> dict:
+    rows = run_grid(smoke=smoke)
+    gates = {"zero_rate_exact": gate_zero_rate_exact(),
+             "pinned_survival": gate_pinned_survival(rows),
+             "determinism": gate_determinism()}
+    gates["ok"] = all(g["ok"] for g in gates.values()
+                      if isinstance(g, dict))
+    report = {"gates": gates, "rows": rows, "survival": survival(rows),
+              "smoke": bool(smoke), "heuristic": HEURISTIC,
+              "thrash_factor": THRASH}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
+    print(f"perf_faults: {len(rows)} cells -> {out}; "
+          f"zero_rate {'OK' if gates['zero_rate_exact']['ok'] else 'FAILED'}"
+          f", pinned {'OK' if gates['pinned_survival']['ok'] else 'FAILED'}"
+          f", determinism "
+          f"{'OK' if gates['determinism']['ok'] else 'FAILED'}")
+    for s in report["survival"]:
+        print(f"  {s['profile']}@{s['rate']}: "
+              f"survival={s['survival']} ({s['survived']}/{s['cells']}) "
+              f"degradations={s['degradations']} "
+              f"overhead_ratio={s['mean_overhead_ratio']}")
+    return report
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced grid + hard gates (CI)")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args(argv)
+    report = run(smoke=args.smoke, out=args.out)
+    if args.smoke and not report["gates"]["ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

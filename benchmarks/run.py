@@ -159,6 +159,21 @@ def perf_offload():
     return _timed("perf_offload", lambda: [m.run(smoke=True)], derive)
 
 
+def perf_faults():
+    from . import perf_faults as m
+
+    def derive(rows):
+        rep = rows[0]
+        if not rep["gates"]["ok"]:
+            return "FAULTS GATE FAILED"
+        surv = min((s["survival"] for s in rep["survival"]), default=1.0)
+        return (f"cells={len(rep['rows'])} min_survival={surv} "
+                f"degradations="
+                f"{sum(s['degradations'] for s in rep['survival'])}")
+
+    return _timed("perf_faults", lambda: [m.run(smoke=True)], derive)
+
+
 def roofline():
     from . import roofline as m
 
@@ -183,6 +198,7 @@ def main() -> None:
     perf_runtime()
     serving()
     perf_offload()
+    perf_faults()
     roofline()
 
 

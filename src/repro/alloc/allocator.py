@@ -65,21 +65,44 @@ class PoolAllocator:
         if size <= 0:
             rt.peak_memory = max(rt.peak_memory, rt.memory)
             return
+        faults = getattr(rt, "faults", None)
+        if faults is not None and faults.alloc_fault():
+            # Injected transient failure of the device allocator itself
+            # (fragmentation our block model cannot see): recover with a
+            # defrag pass — compaction cannot fail — and proceed.
+            rt._degrade("alloc_fault", need=size)
+            self.pool.compact()
+        # Injected budget squeeze (a co-tenant stole device bytes): the
+        # pool's address space is fixed, so the squeeze binds as a byte
+        # gate ahead of placement.  Dormant unless a squeeze is active —
+        # the fault-free victim stream stays purely window-planned.
+        if getattr(rt, "_budget_factor", 1.0) != 1.0:
+            while rt.memory + size > rt.effective_budget():
+                victim = rt._pick_victim(exclude)
+                if victim is None:
+                    break           # fall through to the window machinery
+                rt._evict_or_offload(victim)
         if not self.pool.alloc(s.sid, size):
             window = self.plan_window(rt, size, exclude)
+            tried: set = set()
             while window is None:
                 # Before declaring OOM, reclaim in-flight prefetch-back
                 # reservations (repro.offload): their blocks are neither
                 # free nor evictable, so the planner cannot see them.
+                # Then walk the runtime's degradation ladder (compaction /
+                # forced offload / heuristic escalation — a no-op without
+                # a RecoveryConfig).
                 off = getattr(rt, "offload", None)
-                if off is None or not off.cancel_one_prefetch(rt):
+                if ((off is None or not off.cancel_one_prefetch(rt))
+                        and not rt._recovery_step(exclude, tried)):
                     from ..core.runtime import OOMError
                     st = self.pool.stats()
                     raise OOMError(
                         f"no contiguous window for {size} bytes "
                         f"(free={st.free}, largest_free={st.largest_free}, "
                         f"frag_ratio={st.frag_ratio:.3f}, "
-                        f"capacity={st.capacity})")
+                        f"capacity={st.capacity})"
+                        + rt._memory_diagnostics())
                 if self.pool.alloc(s.sid, size):
                     rt.memory += size
                     rt.peak_memory = max(rt.peak_memory, rt.memory)

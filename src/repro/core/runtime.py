@@ -26,6 +26,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Callable, Optional, Sequence
 
+from ..faults.recovery import RecoveryConfig
+from ..faults.schedule import FaultSchedule
 from .evict_index import EvictIndex, ScopedInvalidator
 from .unionfind import CostUnionFind
 
@@ -139,6 +141,8 @@ class DTRRuntime:
         offload=None,                       # repro.offload.OffloadEngine | None
         offload_fn: Optional[Callable] = None,  # eager hook: bytes -> host
         fetch_fn: Optional[Callable] = None,    # eager hook: bytes -> device
+        faults=None,                        # repro.faults FaultConfig|Schedule
+        recovery: Optional[RecoveryConfig] = None,  # degradation ladder
     ) -> None:
         assert dealloc in ("ignore", "eager", "banish")
         self.budget = float(budget)
@@ -156,6 +160,30 @@ class DTRRuntime:
         self.offload = offload
         self.offload_fn = offload_fn
         self.fetch_fn = fetch_fn
+        # Fault injection (repro.faults).  Accepts a FaultConfig (wrapped
+        # into a per-run schedule here) or a ready FaultSchedule; a config
+        # with every class off collapses to None, and None everywhere means
+        # not a single fault code path runs — bit-exact with the pre-faults
+        # engine by construction.
+        if faults is not None and not isinstance(faults, FaultSchedule):
+            faults = FaultSchedule(faults) if faults.enabled else None
+        self.faults = faults
+        # Graceful degradation: attaching faults arms a default ladder
+        # (injected pressure with no recovery would just be a crash
+        # generator); an explicit RecoveryConfig also works fault-free.
+        if recovery is None and faults is not None:
+            recovery = RecoveryConfig()
+        self.recovery = recovery
+        #: structured degradation/fault events, surfaced in RunResult
+        self.events: list[dict] = []
+        self.degradations = 0           # ladder actions taken (not injections)
+        self._budget_factor = 1.0       # current squeeze multiplier
+        self._remat_counts: dict[int, int] = {}  # sid -> times rematerialized
+        self._escalated = 0             # consumed prefix of escalation_chain
+        self._thrash_disabled = False   # guard exhausted its chain
+        self._w_ops = 0                 # thrash-guard sliding window
+        self._w_total = 0.0
+        self._w_base = 0.0
 
         self.tensors: dict[int, TensorRec] = {}
         self.storages: dict[int, StorageRec] = {}
@@ -531,17 +559,32 @@ class DTRRuntime:
                     continue
                 t.defined = True
                 s.last_access = self.clock
-            self.clock += op.cost
-            self.total_compute += op.cost
+            # Charged cost: with a fault schedule attached, the op's true
+            # hardware cost carries a consistent per-operator misestimation
+            # factor — heuristics keep scoring the unperturbed estimate
+            # (their cost model is wrong, not the clock).
+            cost = op.cost
+            if self.faults is not None:
+                cost = op.cost * self.faults.cost_factor(op.op_id)
+            self.clock += cost
+            self.total_compute += cost
             self.ops_executed += 1
+            if self.faults is not None and self.faults.cfg.squeezes:
+                f = self.faults.budget_factor(self.ops_executed)
+                if f != self._budget_factor:
+                    self._budget_factor = f
+                    self._event("budget_shrink" if f < 1.0
+                                else "budget_restore", factor=f)
             if self.total_compute > self.compute_limit:
                 raise ThrashError(
                     f"compute {self.total_compute:.3g} exceeded thrash "
-                    f"limit {self.compute_limit:.3g}")
+                    f"limit {self.compute_limit:.3g}"
+                    + self._memory_diagnostics())
             if first:
-                self.base_compute += op.cost
+                self.base_compute += cost
             else:
                 self.remat_ops += 1
+            self._thrash_check()
             if self.materialize_fn is not None:
                 self.materialize_fn(op, first)
             # Banish retry: a remat may unblock pending banishes.
@@ -595,19 +638,27 @@ class DTRRuntime:
         if need <= 0:
             self.peak_memory = max(self.peak_memory, self.memory)
             return
-        while self.memory + need > self.budget:
+        if self.faults is not None and self.faults.alloc_fault():
+            self._recover_alloc_fault(need, exclude)
+        tried: set[str] = set()
+        while self.memory + need > self.effective_budget():
             victim = self._pick_victim(exclude)
             if victim is not None:
                 self._evict_or_offload(victim)
                 continue
             # Before declaring OOM, reclaim in-flight prefetch
-            # reservations (they hold device bytes speculatively).
+            # reservations (they hold device bytes speculatively)...
             if (self.offload is not None
                     and self.offload.cancel_one_prefetch(self)):
                 continue
+            # ...then walk the degradation ladder (no-op without a
+            # RecoveryConfig).
+            if self._recovery_step(exclude, tried):
+                continue
             raise OOMError(
                 f"cannot free {need} bytes (resident={self.memory}, "
-                f"budget={self.budget})")
+                f"budget={self.effective_budget()})"
+                + self._memory_diagnostics())
         self.memory += need
         self.peak_memory = max(self.peak_memory, self.memory)
 
@@ -671,8 +722,202 @@ class DTRRuntime:
     def _on_remat(self, s: StorageRec) -> None:
         # (ScopedInvalidator.on_unevict already ran in _perform, before the
         # union-find split below mutates the component cost sums.)
+        self._remat_counts[s.sid] = self._remat_counts.get(s.sid, 0) + 1
         if self.uf is not None:
             self._uf_detach(s)
+
+    # ------------------------------------------------------------------
+    # Fault injection + graceful degradation (repro.faults)
+    # ------------------------------------------------------------------
+    def effective_budget(self) -> float:
+        """Device byte budget after any injected squeeze.
+
+        Bit-exact with ``budget`` when no squeeze is active (the 1.0
+        factor multiplies losslessly), so fault-free admission decisions
+        are unchanged."""
+        return self.budget * self._budget_factor
+
+    def _event(self, kind: str, **fields) -> None:
+        ev = {"kind": kind, "op": self.ops_executed, "clock": self.clock}
+        ev.update(fields)
+        self.events.append(ev)
+
+    def _degrade(self, kind: str, **fields) -> None:
+        """Record a recovery-ladder action (vs. a mere fault injection)."""
+        self.degradations += 1
+        self._event(kind, **fields)
+
+    def _recover_alloc_fault(self, need: float, exclude: set[int]) -> None:
+        """An injected transient allocation failure (byte-counter path).
+
+        Responds like a caching allocator to a failed ``cudaMalloc``:
+        free extra headroom beyond the request, then retry — and the
+        retry is forced to succeed (the fault is transient by
+        construction), so alloc faults alone can never kill a run.
+        """
+        rc = self.recovery
+        self._degrade("alloc_fault", need=need)
+        target = need * (1.0 + rc.alloc_headroom)
+        while self.memory + target > self.effective_budget():
+            victim = self._pick_victim(exclude)
+            if victim is None:
+                break               # best effort; admission proceeds anyway
+            self._evict_or_offload(victim)
+
+    def _recovery_step(self, exclude: set[int], tried: set[str]) -> bool:
+        """One rung of the degradation ladder; True => retry the fit.
+
+        Order: pool compaction (rescues window-OOMs where free bytes
+        exist but no contiguous span) → forced offload (frees device
+        blocks without losing contents) → heuristic escalation (a
+        last-ditch policy change; it cannot create structurally missing
+        candidates, so its real value is the thrash guard — it is kept
+        as an OOM rung because each switch is one bounded retry).
+        ``tried`` scopes once-per-allocation rungs; the ladder as a whole
+        is bounded (compaction once, offload by host capacity, escalation
+        by chain length), so the retry loop always terminates.
+        """
+        rc = self.recovery
+        if rc is None:
+            return False
+        if (rc.compaction and "compact" not in tried
+                and self.allocator is not None and self.allocator.contiguous):
+            tried.add("compact")
+            st = self.allocator.pool.stats()
+            self.allocator.pool.compact()
+            self._degrade("compaction", free=st.free,
+                          largest_free=st.largest_free)
+            return True
+        if rc.forced_offload and self._forced_offload(exclude):
+            return True
+        if rc.escalation and self._escalate_heuristic("oom"):
+            return True
+        return False
+
+    def _forced_offload(self, exclude: set[int]) -> bool:
+        """Ladder rung: bypass the two-choice key and move the
+        cheapest-to-transfer evictable storage to the host tier.
+
+        Unlike eviction this loses no contents (no future remat debt), so
+        it is safe to force regardless of the recompute-vs-transfer
+        comparison ``wants_offload`` would make.  Victim choice is
+        deterministic: minimum transfer key, lowest sid first.
+        """
+        eng = self.offload
+        if eng is None:
+            return False
+        best, best_k = None, 0.0
+        for sid in sorted(self.storages):
+            s = self.storages[sid]
+            if (s.size <= 0 or sid in exclude or not s.evictable()
+                    or not eng.host.can_fit(s.size)):
+                continue
+            k = eng.transfer_key(s)
+            if best is None or k < best_k:
+                best, best_k = s, k
+        if best is None:
+            return False
+        self._degrade("forced_offload", sid=best.sid, size=best.size)
+        self._offload(best)
+        return True
+
+    def _escalate_heuristic(self, reason: str) -> bool:
+        """Switch to the next usable heuristic of the escalation chain.
+
+        Skips entries matching the current (base) heuristic, entries
+        needing machinery this run lacks (union-find, separability for an
+        attached index), and — under the hybrid offload policy — entries
+        that cannot price recomputation.  On success the eviction index
+        is rebuilt from scratch over the existing storages, so victim
+        selection stays bit-exact with a linear scan under the new
+        heuristic.
+        """
+        rc = self.recovery
+        if rc is None or self._escalated >= len(rc.escalation_chain):
+            return False
+        from .heuristics import by_name
+        eng = self.offload
+        if eng is not None and eng.cfg.policy == "offload":
+            # Victims are ranked by transfer cost alone; swapping the base
+            # recompute heuristic would change nothing.
+            return False
+        cur = self.heuristic
+        cur_base = cur.base if getattr(cur, "hybrid", False) else cur
+        while self._escalated < len(rc.escalation_chain):
+            name = rc.escalation_chain[self._escalated]
+            self._escalated += 1
+            h = by_name(name)
+            if h.name == cur_base.name:
+                continue
+            if h.needs_uf and self.uf is None:
+                continue
+            if self.index is not None and not h.separable:
+                continue
+            if eng is not None:
+                if not h.cost_aware:
+                    continue
+                from ..offload.engine import wrap_heuristic
+                h = wrap_heuristic(h, eng)
+            if hasattr(h, "bind"):
+                h.bind(self)
+            old = self.heuristic.name
+            self.heuristic = h
+            if self.index is not None:
+                self.index = EvictIndex(self)
+                for s in self.storages.values():
+                    self.index.register(s)
+            self._degrade("heuristic_escalation", reason=reason,
+                          from_=old, to=h.name)
+            return True
+        return False
+
+    def _thrash_check(self) -> None:
+        """Sliding-window remat-livelock detector (one check per op).
+
+        When a full window's charged compute exceeds ``thrash_ratio``
+        times its first-execution progress, the run is grinding remats —
+        escalate the heuristic now instead of riding into the
+        ``ThrashError`` cliff.  With the chain exhausted the guard
+        disarms and the hard limit fires as before.
+        """
+        rc = self.recovery
+        if rc is None or not rc.thrash_guard or self._thrash_disabled:
+            return
+        self._w_ops += 1
+        if self._w_ops < rc.thrash_window_ops:
+            return
+        dt = self.total_compute - self._w_total
+        db = self.base_compute - self._w_base
+        self._w_ops = 0
+        self._w_total = self.total_compute
+        self._w_base = self.base_compute
+        if dt <= rc.thrash_ratio * db:
+            return
+        if not self._escalate_heuristic("thrash_guard"):
+            self._thrash_disabled = True
+
+    def _memory_diagnostics(self, top_k: int = 5) -> str:
+        """Breakdown appended to OOM/Thrash messages: where the resident
+        bytes are stuck (pinned / locked / evictable) plus the top-k
+        most-rematerialized storages — enough to debug a failed sweep
+        cell from the error string alone."""
+        live = pinned = locked = evictable = 0.0
+        for s in self.storages.values():
+            if not s.resident:
+                continue
+            live += s.size
+            if s.pinned or s.constant:
+                pinned += s.size
+            elif s.locks > 0:
+                locked += s.size
+            elif s.evictable():
+                evictable += s.size
+        top = sorted(self._remat_counts.items(),
+                     key=lambda kv: (-kv[1], kv[0]))[:top_k]
+        hist = ", ".join(f"s{sid}x{n}" for sid, n in top) or "none"
+        return (f" [resident={live:g}: pinned={pinned:g}, "
+                f"locked={locked:g}, evictable={evictable:g}; "
+                f"degradations={self.degradations}; top remats: {hist}]")
 
     # ------------------------------------------------------------------
     # Host offload tier (repro.offload)
@@ -748,7 +993,8 @@ class DTRRuntime:
         if self.total_compute + self.stall_time > self.compute_limit:
             raise ThrashError(
                 f"compute+stall {self.total_compute + self.stall_time:.3g} "
-                f"exceeded thrash limit {self.compute_limit:.3g}")
+                f"exceeded thrash limit {self.compute_limit:.3g}"
+                + self._memory_diagnostics())
 
     # ------------------------------------------------------------------
     # Evicted-component maintenance (h_dtr_eq's equivalence classes)

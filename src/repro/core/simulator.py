@@ -43,7 +43,7 @@ ALLOC_MODES = ("counter", "pool", "pool_nofrag", "pool+host")
 class RunResult:
     budget: float
     ok: bool
-    slowdown: float = float("inf")
+    slowdown: float = 0.0
     compute: float = 0.0
     base_compute: float = 0.0
     evictions: int = 0
@@ -65,7 +65,16 @@ class RunResult:
     prefetch_cancelled: int = 0
     host_peak: float = 0.0
     # (compute + transfer stalls) / base_compute; slowdown counts compute only.
-    overhead: float = float("inf")
+    overhead: float = 0.0
+    # Failure classification (repro.faults): "" for clean runs, else
+    # "oom" | "thrash" (infeasible) | "fault" (injected faults fired and
+    # the run still died — unlucky, not necessarily infeasible) |
+    # "worker" (the sweep worker process died, no runtime to read).
+    error_kind: str = ""
+    # Graceful-degradation telemetry: ladder actions taken, and the full
+    # structured event stream (fault injections + recoveries).
+    degradations: int = 0
+    events: list = field(default_factory=list)
 
 
 def make_allocator(alloc_mode: str | None, placement: str = "best_fit"):
@@ -90,19 +99,34 @@ def _frag_fields(rt: DTRRuntime) -> dict:
                 evict_windows=frag.evict_windows)
 
 
+def classify_error(rt: DTRRuntime, exc: BaseException) -> str:
+    """Structured error kind for a failed run.
+
+    ``"fault"`` when injected faults actually fired before the death —
+    the cell may be feasible on a luckier schedule; ``"oom"``/``"thrash"``
+    otherwise (genuinely infeasible at this budget)."""
+    if rt.faults is not None and rt.faults.injected > 0:
+        return "fault"
+    return "oom" if isinstance(exc, OOMError) else "thrash"
+
+
 def result_from_runtime(rt: DTRRuntime, budget: float, ok: bool,
-                        error: str = "") -> RunResult:
+                        error: str = "", error_kind: str = "") -> RunResult:
     """Assemble a RunResult from a finished (or aborted) runtime.
 
     Single source of truth for the field mapping — ``simulate`` and the
     trace subsystem's ``run_trace`` both build their results here, so the
-    two report paths cannot drift.
+    two report paths cannot drift.  Failed runs are no longer a cliff:
+    they carry their partial progress (ops executed, compute so far, and
+    a *finite* slowdown/overhead over the work actually done) plus the
+    structured ``error_kind``, so sweeps can distinguish infeasible cells
+    from unlucky ones and measure how far a dying run got.
     """
     eng = rt.offload
     return RunResult(
-        budget=budget, ok=ok, error=error,
-        slowdown=rt.slowdown() if ok else float("inf"),
-        overhead=rt.overhead() if ok else float("inf"),
+        budget=budget, ok=ok, error=error, error_kind=error_kind,
+        slowdown=rt.slowdown(), overhead=rt.overhead(),
+        degradations=rt.degradations, events=list(rt.events),
         compute=rt.total_compute, base_compute=rt.base_compute,
         evictions=rt.evictions, remat_ops=rt.remat_ops,
         ops_executed=rt.ops_executed,
@@ -166,6 +190,8 @@ def simulate(
     placement: str = "best_fit",
     index: bool = True,
     offload=None,
+    faults=None,
+    recovery=None,
 ) -> RunResult:
     h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
     engine = None
@@ -181,11 +207,13 @@ def simulate(
                     sample_sqrt=sample_sqrt, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
                     allocator=make_allocator(alloc_mode, placement),
-                    index=index, offload=engine)
+                    index=index, offload=engine,
+                    faults=faults, recovery=recovery)
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
-        return result_from_runtime(rt, budget, ok=False, error=str(e))
+        return result_from_runtime(rt, budget, ok=False, error=str(e),
+                                   error_kind=classify_error(rt, e))
     return result_from_runtime(rt, budget, ok=True)
 
 
@@ -201,6 +229,8 @@ def sweep(
     budget_mode: str = "peak",
     thrash_factor: float = 50.0,
     offload=None,
+    faults=None,
+    recovery=None,
 ) -> SweepResult:
     peak, _ = measure_baseline(log)
     pinned = log.pinned_bytes()
@@ -213,7 +243,8 @@ def sweep(
                      budget=resolve_budget(f, peak, pinned, budget_mode),
                      dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
                      placement=placement, index=index,
-                     thrash_factor=thrash_factor, offload=offload))
+                     thrash_factor=thrash_factor, offload=offload,
+                     faults=faults, recovery=recovery))
         out.runs[-1].budget = f  # report as fraction
     return out
 
@@ -244,14 +275,54 @@ def _simulate_task(payload: tuple) -> RunResult:
     spill-file path (see ``_cached_log``), so payloads stay tiny and pickle
     cheaply and deterministically on every start method."""
     (path, name, heuristic, budget, frac, dealloc, seed, alloc_mode,
-     placement, index, thrash_factor, offload) = payload
+     placement, index, thrash_factor, offload, faults, recovery) = payload
     log = _cached_log(path, name)
     r = simulate(log, by_name(heuristic, seed), budget=budget,
                  dealloc=dealloc, seed=seed, alloc_mode=alloc_mode,
                  placement=placement, index=index,
-                 thrash_factor=thrash_factor, offload=offload)
+                 thrash_factor=thrash_factor, offload=offload,
+                 faults=faults, recovery=recovery)
     r.budget = frac  # report as fraction
     return r
+
+
+def _failed_cell(payload: tuple, msg: str) -> RunResult:
+    """Placeholder result for a cell whose worker died (no runtime state
+    to read — only the cell's identity survives)."""
+    return RunResult(budget=payload[4], ok=False, error=msg,
+                     error_kind="worker")
+
+
+def _run_pool(payloads: list[tuple], workers: int) -> list:
+    """Dispatch cells to a process pool, surviving worker deaths.
+
+    Each cell is its own future, so one poisoned cell cannot take the
+    whole grid down.  When a worker dies, every future still in flight
+    raises ``BrokenProcessPool`` — innocent casualties included — so each
+    such cell is retried once in an isolated single-worker pool; a cell
+    that kills *that* pool too is recorded as a failed ``RunResult``
+    (``error_kind="worker"``) and the rest of the sweep completes.
+    """
+    from concurrent.futures import ProcessPoolExecutor
+    from concurrent.futures.process import BrokenProcessPool
+
+    results: list = [None] * len(payloads)
+    broken: list[int] = []
+    with ProcessPoolExecutor(max_workers=workers) as pool:
+        futs = [pool.submit(_simulate_task, p) for p in payloads]
+        for i, fut in enumerate(futs):
+            try:
+                results[i] = fut.result()
+            except BrokenProcessPool:
+                broken.append(i)
+    for i in broken:
+        try:
+            with ProcessPoolExecutor(max_workers=1) as solo:
+                results[i] = solo.submit(_simulate_task,
+                                         payloads[i]).result()
+        except BrokenProcessPool:
+            results[i] = _failed_cell(payloads[i], "sweep worker died")
+    return results
 
 
 def sweep_parallel(
@@ -267,15 +338,19 @@ def sweep_parallel(
     budget_mode: str = "peak",
     thrash_factor: float = 50.0,
     offload=None,
+    faults=None,
+    recovery=None,
 ) -> list[SweepResult]:
     """Sweep the budgets × heuristics × models grid across processes.
 
     Every grid cell is an independent ``simulate`` call, so the grid is
-    embarrassingly parallel; cells are dispatched to a process pool and
-    regrouped into one ``SweepResult`` per (model, heuristic) pair, in grid
-    order — results are identical to nested serial ``sweep`` calls.
-    ``processes=0`` (or a single-cell grid) forces the serial path; any
-    pool bring-up failure (restricted environments) falls back to serial.
+    embarrassingly parallel; cells are dispatched to a process pool (one
+    future per cell) and regrouped into one ``SweepResult`` per (model,
+    heuristic) pair, in grid order — results are identical to nested
+    serial ``sweep`` calls.  ``processes=0`` (or a single-cell grid)
+    forces the serial path; pool bring-up failure (restricted
+    environments) falls back to serial, and a worker dying mid-sweep
+    fails only its own cell (``error_kind="worker"``) — see ``_run_pool``.
     """
     logs = [logs] if isinstance(logs, Log) else list(logs)
     heuristics = ([heuristics] if isinstance(heuristics, str)
@@ -299,28 +374,26 @@ def sweep_parallel(
             (paths[i], logs[i].name, h,
              resolve_budget(f, baselines[i], pinned[i], budget_mode), f,
              dealloc, seed, alloc_mode, placement, index, thrash_factor,
-             offload)
+             offload, faults, recovery)
             for i, h in grid for f in fractions]
 
         runs: list[RunResult] | None = None
         if processes != 0 and len(payloads) > 1:
             try:
-                from concurrent.futures import ProcessPoolExecutor
-                from concurrent.futures.process import BrokenProcessPool
+                from concurrent.futures import ProcessPoolExecutor  # noqa: F401
             except ImportError:
                 pass
             else:
                 try:
                     workers = processes or min(len(payloads),
                                                os.cpu_count() or 1)
-                    with ProcessPoolExecutor(max_workers=workers) as pool:
-                        runs = list(pool.map(_simulate_task, payloads,
-                                             chunksize=1))
-                except (OSError, PermissionError, BrokenProcessPool):
-                    # Pool bring-up failure or a killed worker (e.g. OOM):
+                    runs = _run_pool(payloads, workers)
+                except (OSError, PermissionError):
+                    # Pool bring-up failure (restricted environments):
                     # redo the whole grid serially — cells are
                     # deterministic, so results match an undisturbed
-                    # parallel run.
+                    # parallel run.  (Worker deaths are handled inside
+                    # _run_pool, per cell.)
                     runs = None
         if runs is None:
             runs = [_simulate_task(p) for p in payloads]

@@ -74,7 +74,7 @@ class DTRContext:
                  dealloc: str = "eager", use_wallclock_cost: bool = True,
                  seed: int = 0, alloc_mode: str | None = None,
                  placement: str = "best_fit", recorder=None,
-                 offload=None):
+                 offload=None, faults=None, recovery=None):
         # alloc_mode="pool" maps the real JAX buffers onto simulated pool
         # accounting: every resident storage occupies a contiguous block and
         # memory pressure evicts contiguous windows (repro.alloc), so eager
@@ -99,7 +99,12 @@ class DTRContext:
             materialize_fn=self._on_perform, free_fn=self._on_free,
             allocator=make_allocator(alloc_mode, placement),
             offload=engine, offload_fn=self._on_offload,
-            fetch_fn=self._on_fetch)
+            fetch_fn=self._on_fetch,
+            # repro.faults: injected faults perturb the *simulated* memory
+            # pressure and clock only — the replay closures still produce
+            # exact buffers, so a recovered run's numerics match a
+            # fault-free one bit-for-bit (the differential tests pin this).
+            faults=faults, recovery=recovery)
         self.buffers: dict[int, jax.Array] = {}     # tid -> concrete array
         self.host_buffers: dict[int, np.ndarray] = {}  # tid -> offloaded copy
         self.closures: dict[int, Callable] = {}     # op_id -> replay fn

@@ -45,6 +45,24 @@ def main(argv=None):
     ap.add_argument("--capture", default=None, metavar="PATH",
                     help="record the executed operator stream as a DTR "
                          "trace log (repro.trace)")
+    ap.add_argument("--kv-budget", type=float, default=None, metavar="FRAC",
+                    help="admission control: cap the projected KV footprint "
+                         "of admitted requests at FRAC x the full cache "
+                         "size; overflow preempts the cheapest-to-"
+                         "rematerialize slot and requeues it with bounded "
+                         "retries + backoff (default: off)")
+    ap.add_argument("--admit-retries", type=int, default=3,
+                    help="max requeues per request before rejection")
+    ap.add_argument("--admit-backoff", type=int, default=8,
+                    help="base requeue backoff in decode steps (doubles "
+                         "per retry, capped)")
+    ap.add_argument("--chaos-shrink", type=float, default=0.0,
+                    help="repro.faults: periodically shrink the admission "
+                         "KV budget to this fraction (a co-tenant stealing "
+                         "device memory); 0 = off")
+    ap.add_argument("--chaos-period", type=int, default=64,
+                    help="squeeze period in decode steps")
+    ap.add_argument("--chaos-seed", type=int, default=0)
     ap.add_argument("--offload-sweep", action="store_true",
                     help="after capture, replay the captured trace through "
                          "the hybrid remat-or-offload tier (repro.offload): "
@@ -96,6 +114,33 @@ def main(argv=None):
         serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
         cache = M.init_cache(cfg, args.slots, args.max_len)
 
+        # Optional admission control + preemption-with-requeue
+        # (repro.launch.admission): requests are priced at their projected
+        # KV footprint against a fraction of the full cache size; a
+        # request that cannot fit preempts the cheapest-to-rematerialize
+        # slot instead of the loop dying or the request silently queueing
+        # forever.  Default off — the loop below is bit-identical without
+        # --kv-budget.
+        admit = None
+        tickets = {}
+        if args.kv_budget is not None:
+            from repro.launch.admission import (ADMIT, REJECT,
+                                                AdmissionController, Ticket)
+            cache_bytes = sum(int(x.nbytes) for x in jax.tree.leaves(cache))
+            per_tok = cache_bytes / (args.slots * args.max_len)
+            chaos = None
+            if args.chaos_shrink > 0:
+                from repro.faults import FaultConfig, FaultSchedule
+                chaos = FaultSchedule(FaultConfig(
+                    seed=args.chaos_seed, budget_shrink=args.chaos_shrink,
+                    budget_period=args.chaos_period))
+            admit = AdmissionController(
+                args.kv_budget * cache_bytes, per_tok,
+                max_retries=args.admit_retries,
+                backoff_steps=args.admit_backoff, faults=chaos)
+            tickets = {rid: Ticket(rid, len(prompt), args.gen)
+                       for rid, prompt in queue}
+
         # True continuous batching: each slot carries its own position
         # clock (decode_step accepts a [slots] pos vector — per-slot cache
         # scatter + per-slot masks/rope), so a finished slot is refilled
@@ -121,20 +166,85 @@ def main(argv=None):
                 if x.ndim >= 2 and x.shape[1] == args.slots else x,
                 cache)
 
-        def refill():
+        def admit_into(i, rid, prompt):
             nonlocal cache
+            slots[i] = {"rid": rid, "prompt": prompt, "i": 0, "out": []}
+            pos[i] = 0
+            cache = reset_slot_cache(cache, i)
+
+        def active_map():
+            """slot -> (Ticket, tokens processed) for the controller."""
+            return {j: (tickets[s["rid"]], int(pos[j]))
+                    for j, s in enumerate(slots) if s is not None}
+
+        def preempt(j, tick):
+            """Preempt slot ``j``: its KV chunks are dropped (a DTR
+            eviction of the whole request) and the request requeues with
+            backoff; replaying it later is the rematerialization."""
+            nonlocal cache
+            s = slots[j]
+            admit.requeue(tickets[s["rid"]], tick)
+            queue.append((s["rid"], s["prompt"]))
+            if tracer is not None and s["i"] > 0:
+                tracer.retire(s["rid"], j)
+            slots[j] = None
+            pos[j] = 0
+            cache = reset_slot_cache(cache, j)
+
+        def refill(tick=0):
+            nonlocal cache
+            fresh = set()   # admitted this pass: not preemption candidates
             for i in range(args.slots):
                 if slots[i] is None and queue:
-                    rid, prompt = queue.popleft()
-                    slots[i] = {"rid": rid, "prompt": prompt, "i": 0,
-                                "out": []}
-                    pos[i] = 0
-                    cache = reset_slot_cache(cache, i)
+                    if admit is None:
+                        rid, prompt = queue.popleft()
+                        admit_into(i, rid, prompt)
+                        continue
+                    # Arrival order, but requests backing off or waiting
+                    # for space do not block eligible ones behind them.
+                    for k in range(len(queue)):
+                        rid, prompt = queue[k]
+                        verdict, victims = admit.decide(
+                            tickets[rid],
+                            {j: v for j, v in active_map().items()
+                             if j not in fresh}, tick)
+                        if verdict == REJECT:
+                            del queue[k]
+                            break
+                        if verdict == ADMIT:
+                            del queue[k]
+                            for j in victims:
+                                preempt(j, tick)
+                            admit_into(i, rid, prompt)
+                            fresh.add(i)
+                            break
 
+        tick = idle = 0
         while queue or any(s is not None for s in slots):
-            refill()   # mid-stream: neighbors keep their positions
+            if admit is not None:
+                # Injected budget squeeze (a co-tenant stole device
+                # memory): shed load until usage fits again.
+                for j in admit.enforce(active_map(), tick):
+                    preempt(j, tick)
+            refill(tick)   # mid-stream: neighbors keep their positions
             if not any(s is not None for s in slots):
-                break
+                if admit is None or not queue:
+                    break
+                # Everything queued is backing off / waiting out a
+                # squeeze: idle ticks pass without decode work.  The
+                # guard bounds pathological schedules (e.g. a permanent
+                # squeeze no request fits under).
+                tick += 1
+                idle += 1
+                if idle > 10000:
+                    for rid, _ in queue:
+                        admit.rejected += 1
+                        admit._event("reject", rid=rid, step=tick,
+                                     reason="idle_guard")
+                    queue.clear()
+                    break
+                continue
+            idle = 0
             for i, s in enumerate(slots):
                 if s is None:
                     tok[i, 0] = 0
@@ -144,6 +254,7 @@ def main(argv=None):
             nxt, cache = serve(params, cache,
                                jnp.asarray(tok), jnp.asarray(pos))
             steps += 1
+            tick += 1
             nxt_np = np.asarray(nxt)[..., 0] if cfg.n_codebooks else \
                 np.asarray(nxt)
             for i, s in enumerate(slots):
@@ -166,6 +277,8 @@ def main(argv=None):
                     completed[s["rid"]] = s["out"]
                     if tracer is not None:
                         tracer.retire(s["rid"], i)
+                    if admit is not None:
+                        admit.retire(tickets[s["rid"]])
                     slots[i] = None
                     # the freed slot refills on the next loop iteration —
                     # captured traces now exercise interleaved lifetimes
@@ -174,6 +287,13 @@ def main(argv=None):
         print(f"served {len(completed)}/{args.requests} requests, "
               f"{steps} decode steps, {dt:.2f}s "
               f"({dt/max(steps,1)*1e3:.1f} ms/step batched x{args.slots})")
+        if admit is not None:
+            c = admit.counters()
+            print(f"admission: admitted={c['admitted']} "
+                  f"completed={c['completed']} requeued={c['requeued']} "
+                  f"rejected={c['rejected']} "
+                  f"preemptions={c['preemptions']} "
+                  f"(kv_budget={args.kv_budget:.2f}x cache)")
         for rid in sorted(completed)[:4]:
             print(f"  req{rid}: {completed[rid][:10]}...")
         if tracer is not None:

@@ -68,6 +68,15 @@ class OffloadEngine:
 
     # -- two-choice policy ----------------------------------------------
     def wants_offload(self, rt, s) -> bool:
+        """Two-choice decision; also the *simultaneous exhaustion* rule.
+
+        A full host tier (``can_fit`` False) deterministically demotes
+        every would-be offload to a plain eviction — so device pressure
+        with both tiers exhausted falls back to pure DTR and, only when
+        no evictable storage remains anywhere, a controlled ``OOMError``.
+        There is no evict-from-host path: host contents are dropped only
+        on death/banish, never to admit another offload.
+        """
         if s.size <= 0 or not self.host.can_fit(s.size):
             return False
         if self.cfg.policy == "offload":
@@ -79,9 +88,27 @@ class OffloadEngine:
         # scan and index engines (cached e*/ẽ* values are shared).
         return self.transfer_key(s) < self._base.key(rt, s)
 
+    # -- fault injection (repro.faults) ----------------------------------
+    def _faulted(self, rt, channel: str, ch, nbytes: float):
+        """Plan one possibly-faulted transfer: (extra, mult) for the
+        channel, with injected retries/spikes recorded as runtime events.
+        Fault-free (no schedule attached) this is exactly (0.0, 1.0)."""
+        faults = getattr(rt, "faults", None)
+        if faults is None:
+            return 0.0, 1.0
+        extra, retries, mult = faults.transfer_plan(
+            channel, nbytes, ch.duration(nbytes))
+        if mult != 1.0:
+            rt._event("transfer_spike", channel=channel, mult=mult)
+        if retries:
+            rt._degrade("transfer_retry", channel=channel,
+                        retries=retries, extra=extra)
+        return extra, mult
+
     # -- offload ---------------------------------------------------------
     def on_offload(self, rt, s, defined_tids: tuple[int, ...]) -> None:
-        done = self.model.d2h.transfer(rt.clock, s.size)
+        extra, mult = self._faulted(rt, "d2h", self.model.d2h, s.size)
+        done = self.model.d2h.transfer(rt.clock, s.size, extra, mult)
         self.host.put(s.sid, s.size)
         self._recs[s.sid] = _OffRec(s.size, done, defined_tids)
 
@@ -90,10 +117,15 @@ class OffloadEngine:
 
     # -- fetch (sync miss path) ------------------------------------------
     def begin_fetch(self, rt, s) -> float:
-        """Schedule the synchronous H2D copy-back; returns the stall."""
+        """Schedule the synchronous H2D copy-back; returns the stall.
+
+        Injected channel faults retry with capped exponential backoff
+        inside the transfer itself (the whole loop is one synchronous
+        wait), so every failed attempt lands on the stall metric."""
         rec = self._recs[s.sid]
         start = rt.clock if rt.clock > rec.d2h_done else rec.d2h_done
-        done = self.model.h2d.transfer(start, rec.nbytes)
+        extra, mult = self._faulted(rt, "h2d", self.model.h2d, rec.nbytes)
+        done = self.model.h2d.transfer(start, rec.nbytes, extra, mult)
         return done - rt.clock
 
     def finish_fetch(self, rt, s) -> tuple[int, ...]:
@@ -127,10 +159,21 @@ class OffloadEngine:
                 continue
             if nxt - now > lead * self.model.h2d.duration(rec.nbytes):
                 continue
+            faults = getattr(rt, "faults", None)
+            if faults is not None and faults.prefetch_lost():
+                # The prefetch is lost in flight: never issued, no device
+                # reservation, no channel time.  The eventual access takes
+                # the synchronous-fetch miss path, charged to the stall
+                # metric — the prefetch-failure fallback.
+                rt._event("prefetch_lost", sid=sid)
+                continue
             if not self._reserve(rt, s):
                 continue
             start = now if now > rec.d2h_done else rec.d2h_done
-            rec.ready_at = self.model.h2d.transfer(start, rec.nbytes)
+            extra, mult = self._faulted(rt, "h2d", self.model.h2d,
+                                        rec.nbytes)
+            rec.ready_at = self.model.h2d.transfer(start, rec.nbytes,
+                                                   extra, mult)
             rt.prefetch_issued += 1
 
     def _reserve(self, rt, s) -> bool:
@@ -140,7 +183,7 @@ class OffloadEngine:
             if not alloc.pool.alloc(s.sid, s.size):
                 return False
         else:
-            if rt.memory + s.size > rt.budget:
+            if rt.memory + s.size > rt.effective_budget():
                 return False
             if alloc is not None:
                 alloc.place(s)

@@ -64,11 +64,18 @@ class Channel:
     def duration(self, nbytes: float) -> float:
         return self.latency + nbytes / self.bandwidth
 
-    def transfer(self, now: float, nbytes: float) -> float:
+    def transfer(self, now: float, nbytes: float, extra: float = 0.0,
+                 mult: float = 1.0) -> float:
         """Schedule ``nbytes`` at simulated time ``now``; returns the
-        completion time (>= now + duration when the channel is busy)."""
+        completion time (>= now + duration when the channel is busy).
+
+        ``mult`` scales the duration (an injected latency spike) and
+        ``extra`` adds flat channel occupancy (failed attempts + backoff
+        waits of an injected-fault retry loop, ``repro.faults``); the
+        defaults make the fault-free path bit-exact with the two-argument
+        form."""
         start = now if now > self.busy_until else self.busy_until
-        done = start + self.duration(nbytes)
+        done = start + self.duration(nbytes) * mult + extra
         self.busy_until = done
         self.transfers += 1
         self.bytes += nbytes

@@ -20,8 +20,9 @@ from dataclasses import asdict
 from ..core.graph import Log, replay
 from ..core.heuristics import ALL_NAMES, by_name
 from ..core.runtime import DTRRuntime, OOMError, ThrashError
-from ..core.simulator import (RunResult, measure_baseline, resolve_budget,
-                              result_from_runtime, simulate, sweep_parallel)
+from ..core.simulator import (RunResult, classify_error, measure_baseline,
+                              resolve_budget, result_from_runtime, simulate,
+                              sweep_parallel)
 
 #: Heuristics with a key()/staleness decomposition: the eviction index and
 #: the linear scan must agree bit-exactly on these (h_rand consumes RNG
@@ -33,14 +34,18 @@ DEFAULT_FRACTIONS = (0.9, 0.7, 0.5, 0.4, 0.3)
 
 def run_trace(log: Log, heuristic: str, budget: float, *,
               dealloc: str = "eager", index: bool = True, seed: int = 0,
-              thrash_factor: float = 50.0, offload=None):
+              thrash_factor: float = 50.0, offload=None, faults=None,
+              recovery=None):
     """Replay ``log`` once; returns (RunResult, victim sid sequence).
 
     ``offload`` (an enabled ``repro.offload.OffloadConfig``) attaches the
     hybrid host tier; the victim sequence then records *evictions* only
     (offloads preserve contents, so they are not decisions the golden
     digests pin).  ``host_budget=0`` configs are ignored — bit-exact with
-    the plain replay.
+    the plain replay.  ``faults`` / ``recovery`` (``repro.faults``)
+    attach a replayable chaos schedule and the degradation ladder; the
+    golden fault-replay tests pin the victim sequence *and* the structured
+    event stream of pinned schedules.
     """
     h = by_name(heuristic, seed)
     engine = None
@@ -51,7 +56,8 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
     rt = DTRRuntime(budget=budget, heuristic=h,
                     dealloc=dealloc, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
-                    index=index, offload=engine)
+                    index=index, offload=engine,
+                    faults=faults, recovery=recovery)
     victims: list[int] = []
     inner = rt._evict
 
@@ -60,12 +66,13 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
         inner(s)
 
     rt._evict = traced_evict
-    ok, err = True, ""
+    ok, err, kind = True, "", ""
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:
-        ok, err = False, str(e)
-    return result_from_runtime(rt, budget, ok=ok, error=err), victims
+        ok, err, kind = False, str(e), classify_error(rt, e)
+    return result_from_runtime(rt, budget, ok=ok, error=err,
+                               error_kind=kind), victims
 
 
 #: RunResult fields that must be identical between the index and the scan
@@ -74,7 +81,7 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
 PARITY_FIELDS = ("ok", "evictions", "remat_ops", "ops_executed",
                  "compute", "base_compute", "peak_memory", "slowdown",
                  "stall_time", "offloads", "fetches", "prefetch_hits",
-                 "overhead")
+                 "overhead", "degradations")
 
 
 def verify_oracle_equivalence(log: Log, *, heuristics=SEPARABLE,
