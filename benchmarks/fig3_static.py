@@ -19,7 +19,7 @@ import time
 from repro.core import baselines, graphs
 from repro.core.graph import replay
 from repro.core.heuristics import by_name
-from repro.core.runtime import DTRRuntime, OOMError
+from repro.core.runtime import DTRRuntime, OOMError, ThrashError
 
 
 def run(ns=(64, 128, 256, 512), budget_fracs=(0.5, 0.25, 0.125)):
@@ -37,7 +37,7 @@ def run(ns=(64, 128, 256, 512), budget_fracs=(0.5, 0.25, 0.125)):
                     replay(log, rt)
                     ops = rt.ops_executed
                     ok = True
-                except (OOMError, Exception) as e:
+                except (OOMError, ThrashError):
                     ops, ok = 0, False
                 wall = time.perf_counter() - t0
                 rows.append(dict(
@@ -51,7 +51,7 @@ def run(ns=(64, 128, 256, 512), budget_fracs=(0.5, 0.25, 0.125)):
                 fwd_ops, peak = baselines.BASELINES[name](n, budget)
                 wall = time.perf_counter() - t0
                 total = fwd_ops + n
-                feasible = peak <= budget or name == "chen_sqrt"
+                feasible = peak <= budget
                 rows.append(dict(
                     planner=name, n=n, budget=budget, ok=feasible,
                     total_ops=total, overhead=round(total / (2 * n), 3),

@@ -1,0 +1,133 @@
+"""Static-optimal baseline panel on the golden corpus (``BENCH_static.json``).
+
+The Checkmate bridge (arXiv:1910.02653): for every captured trace and
+activation-budget fraction, compare online DTR against the best *honest*
+static checkpointing plan —
+
+  * **model ladder** — heterogeneous optimal DP vs Chen √n / Chen greedy
+    on the chain extracted from the trace (``repro.static.solvers``);
+    the DP is structurally <= both Chen costs (it takes the min over a
+    candidate pool containing them);
+  * **panel winner** — the cheapest plan whose *evaluated* peak fits the
+    budget (``repro.static.panel``: solo-screened greedy frontier pooled
+    with the solver proposals, all judged by the bit-exact runtime
+    mirror).  Cells where no known static plan fits are reported as
+    ``static: null`` — that is DTR's adaptivity headroom, not an error;
+  * **LP floor** — Checkmate's LP-relaxation lower bound on extra
+    recompute (``repro.static.lpbound``), valid for *any* order-
+    preserving schedule at the budget, so it floors both the static
+    winner and every feasible DTR run;
+  * **DTR rows** — ``h_dtr`` / ``h_dtr_eq`` at the same budgets, with
+    ``gap_vs_static`` = DTR compute / static compute where both exist.
+
+Every winning plan is replayed through the real ``DTRRuntime`` with the
+heuristic disabled and must match the evaluator bit-for-bit (remats,
+evictions, compute, peak) — static and online rows share one accounting.
+
+``--smoke`` runs a reduced corpus and hard-gates CI on the invariants:
+DP <= Chen at every cell, LP <= executed extra compute of every feasible
+plan (static and DTR), and executor/evaluator parity on every winner.
+"""
+from __future__ import annotations
+
+import json
+import os
+
+from repro.core.graph import Log
+from repro.trace.replay import static_gap_curve
+
+TRACES_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                          os.pardir, "tests", "traces")
+GOLDEN = ("train_smoke", "eager_mlp", "treelstm", "random_dag",
+          "serve_smoke_s2")
+SMOKE_GOLDEN = ("eager_mlp", "treelstm")
+
+FRACTIONS = (0.9, 0.7, 0.5)
+HEURISTICS = ("h_dtr", "h_dtr_eq")
+THRASH = 10.0
+
+
+def _golden(name: str) -> Log:
+    with open(os.path.join(TRACES_DIR, name + ".log")) as f:
+        return Log.loads(f.read(), name=name)
+
+
+def check_invariants(curves: list[dict]) -> list[str]:
+    """The differential gates; empty list == all invariants hold."""
+    bad: list[str] = []
+    for cur in curves:
+        for cell in cur["cells"]:
+            where = f"{cur['trace']}@{cell['fraction']}"
+            m = cell["model"]
+            if m["dp_le_chen"] is False:
+                bad.append(f"{where}: model DP cost above a Chen baseline")
+            st = cell["static"]
+            if st is not None:
+                if st["peak"] > cell["budget"]:
+                    bad.append(f"{where}: winner peak exceeds budget")
+                if not st["lp_le_extra"]:
+                    bad.append(f"{where}: LP floor above static extra "
+                               f"compute")
+                ex = st.get("exec")
+                if ex is not None and not all(ex.values()):
+                    bad.append(f"{where}: executor/evaluator parity "
+                               f"broken {ex}")
+            for h, row in cell["dtr"].items():
+                if row["ok"] and row["extra_ge_lp"] is False:
+                    bad.append(f"{where}/{h}: LP floor above DTR extra "
+                               f"compute")
+    return bad
+
+
+def run(smoke: bool = False, out: str = "BENCH_static.json") -> dict:
+    traces = SMOKE_GOLDEN if smoke else GOLDEN
+    curves = []
+    for name in traces:
+        log = _golden(name)
+        curves.append(static_gap_curve(
+            log, fractions=FRACTIONS, heuristics=HEURISTICS,
+            thrash_factor=THRASH, execute=True))
+    violations = check_invariants(curves)
+    report = {"curves": curves, "violations": violations,
+              "ok": not violations, "smoke": bool(smoke),
+              "fractions": list(FRACTIONS), "heuristics": list(HEURISTICS),
+              "thrash_factor": THRASH}
+    with open(out, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
+    n_cells = sum(len(c["cells"]) for c in curves)
+    n_feas = sum(1 for c in curves for cell in c["cells"]
+                 if cell["static"] is not None)
+    print(f"perf_static: {n_cells} cells -> {out}; "
+          f"static feasible in {n_feas}/{n_cells}, "
+          f"invariants {'OK' if not violations else 'FAILED'}")
+    for cur in curves:
+        for cell in cur["cells"]:
+            st = cell["static"]
+            s = (f"static oh={st['overhead']:.3f} ({st['source']}, "
+                 f"drop {st['n_drop']})" if st else "static infeasible")
+            d = cell["dtr"].get("h_dtr", {})
+            g = d.get("gap_vs_static")
+            print(f"  {cur['trace']}@{cell['fraction']}: {s}; "
+                  f"h_dtr {'oh=' + format(d['overhead'], '.3f') if d.get('ok') else 'FAIL'}"
+                  f"{f' gap={g:.3f}' if g else ''}")
+    for v in violations:
+        print(f"  VIOLATION {v}")
+    return report
+
+
+def main(argv=None) -> int:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced corpus + hard invariant gate (CI)")
+    ap.add_argument("--out", default="BENCH_static.json")
+    args = ap.parse_args(argv)
+    report = run(smoke=args.smoke, out=args.out)
+    if args.smoke and not report["ok"]:
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

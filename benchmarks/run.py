@@ -159,6 +159,25 @@ def perf_offload():
     return _timed("perf_offload", lambda: [m.run(smoke=True)], derive)
 
 
+def perf_static():
+    from . import perf_static as m
+
+    def derive(rows):
+        rep = rows[0]
+        if not rep["ok"]:
+            return f"STATIC INVARIANTS FAILED({len(rep['violations'])})"
+        gaps = [cell["dtr"]["h_dtr"]["gap_vs_static"]
+                for c in rep["curves"] for cell in c["cells"]
+                if cell["dtr"].get("h_dtr", {}).get("gap_vs_static")]
+        mean = sum(gaps) / max(len(gaps), 1)
+        n_feas = sum(1 for c in rep["curves"] for cell in c["cells"]
+                     if cell["static"] is not None)
+        return (f"feasible_cells={n_feas} "
+                f"mean_dtr_vs_static_gap={mean:.3f}")
+
+    return _timed("perf_static", lambda: [m.run(smoke=True)], derive)
+
+
 def perf_faults():
     from . import perf_faults as m
 
@@ -198,6 +217,7 @@ def main() -> None:
     perf_runtime()
     serving()
     perf_offload()
+    perf_static()
     perf_faults()
     roofline()
 

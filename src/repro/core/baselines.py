@@ -85,3 +85,18 @@ BASELINES = {
     "revolve": revolve,
     "optimal_dp": optimal_dp,
 }
+
+
+def chain_solvers():
+    """Bridge to the trace-level planners of ``repro.static.solvers``.
+
+    The closed-form baselines above plan on *homogeneous unit chains*
+    (every op costs 1, every tensor weighs 1 slot).  The ``repro.static``
+    solvers generalize them to heterogeneous chains extracted from real
+    traces (per-item byte sizes, per-segment recompute costs) and return
+    executable ``Plan``s rather than op counts.  Returns the ``{name:
+    solver(chain, budget) -> Plan}`` registry; imported lazily so the
+    core package stays dependency-free of the static subsystem.
+    """
+    from ..static.solvers import SOLVERS
+    return dict(SOLVERS)

@@ -311,6 +311,31 @@ class LogBuilder:
 # Replay
 # ---------------------------------------------------------------------------
 
+def parse_call_block(instrs: Sequence[Instr], i: int):
+    """Parse the (MEMORY, ALIAS) metadata block following a CALL at ``i``.
+
+    Returns ``(sizes, alias_names, j)`` where ``sizes[k]`` / ``alias_names[k]``
+    describe output ``k`` (``alias_names[k] is None`` for an owning output)
+    and ``j`` is the index of the first instruction after the block.  Shared
+    by ``replay`` and the static-planner trace analysis (``repro.static``),
+    so the two consumers cannot drift on the block layout.
+    """
+    ins = instrs[i]
+    assert isinstance(ins, Call)
+    sizes: list[int] = []
+    alias_names: list[str | None] = []
+    j = i + 1
+    for t in ins.outputs:
+        mem = instrs[j]
+        ali = instrs[j + 1]
+        assert isinstance(mem, Memory) and mem.t == t
+        assert isinstance(ali, Alias) and ali.t_out == t
+        sizes.append(mem.size)
+        alias_names.append(ali.t_in)
+        j += 2
+    return sizes, alias_names, j
+
+
 def replay(log: Log, rt) -> dict[str, int]:
     """Drive runtime ``rt`` (core.runtime.DTRRuntime) from a log.
 
@@ -336,17 +361,8 @@ def replay(log: Log, rt) -> dict[str, int]:
             continue
         if isinstance(ins, Call):
             # Followed by len(outputs) (MEMORY, ALIAS) pairs.
-            sizes: list[int] = []
-            aliases: list[int | None] = []
-            j = i + 1
-            for t in ins.outputs:
-                mem = instrs[j]
-                ali = instrs[j + 1]
-                assert isinstance(mem, Memory) and mem.t == t
-                assert isinstance(ali, Alias) and ali.t_out == t
-                sizes.append(mem.size)
-                aliases.append(env[ali.t_in] if ali.t_in is not None else None)
-                j += 2
+            sizes, alias_names, j = parse_call_block(instrs, i)
+            aliases = [env[a] if a is not None else None for a in alias_names]
             tids = rt.call(ins.op, ins.cost, [env[x] for x in ins.inputs],
                            sizes, aliases=aliases,
                            out_names=list(ins.outputs))

@@ -19,7 +19,8 @@ from .graph import Log, LogBuilder
 # Theorem graphs
 # ---------------------------------------------------------------------------
 
-def linear_network(n: int, unit_cost: float = 1.0, unit_size: int = 1) -> Log:
+def linear_network(n: int, unit_cost: float = 1.0, unit_size: int = 1,
+                   costs=None, sizes=None) -> Log:
     """N-op linear feedforward net + backward, per Appendix A.1.
 
     Forward:  t_i = f_i(t_{i-1});  t_0 is a pinned constant input.
@@ -28,23 +29,34 @@ def linear_network(n: int, unit_cost: float = 1.0, unit_size: int = 1) -> Log:
     Releases are emitted at last use, so e.g. t_N dies right after the
     forward pass (it feeds no backward op) — matching the paper's liveness.
     The final gradient t̂_1 is kept (output condition).
+
+    ``costs`` / ``sizes`` (length-``n`` sequences) make the chain
+    heterogeneous: layer ``i`` costs ``costs[i-1]`` and its activation /
+    gradient occupy ``sizes[i-1]`` bytes (the input ``t_0`` takes
+    ``sizes[0]``).  This is the ground-truth family for the differential
+    solver tests in ``repro.static`` — real checkpointing trade-offs are
+    driven by exactly this per-layer cost/size variation.  Defaults
+    reproduce the homogeneous unit chain bit-for-bit.
     """
+    costs = [unit_cost] * n if costs is None else [float(c) for c in costs]
+    sizes = [unit_size] * n if sizes is None else [int(s) for s in sizes]
+    assert len(costs) == n and len(sizes) == n
     b = LogBuilder(name=f"linear{n}")
-    t0 = b.constant(unit_size, name="t0")
+    t0 = b.constant(sizes[0] if n else unit_size, name="t0")
     fwd = [t0]
     for i in range(1, n + 1):
-        (ti,) = b.call([fwd[-1]], [unit_size], unit_cost, f"f{i}",
+        (ti,) = b.call([fwd[-1]], [sizes[i - 1]], costs[i - 1], f"f{i}",
                        out_names=[f"t{i}"])
         fwd.append(ti)
     grads: dict[int, str] = {}
-    (gN,) = b.call([fwd[n - 1]], [unit_size], unit_cost, f"g{n}",
+    (gN,) = b.call([fwd[n - 1]], [sizes[n - 1]], costs[n - 1], f"g{n}",
                    out_names=[f"g{n}"])
     grads[n] = gN
     for i in range(n - 1, 1, -1):
-        (gi,) = b.call([fwd[i - 1], grads[i + 1]], [unit_size], unit_cost,
-                       f"g{i}", out_names=[f"g{i}"])
+        (gi,) = b.call([fwd[i - 1], grads[i + 1]], [sizes[i - 1]],
+                       costs[i - 1], f"g{i}", out_names=[f"g{i}"])
         grads[i] = gi
-    (g1,) = b.call([grads[2]], [unit_size], unit_cost, "g1", out_names=["g1"])
+    (g1,) = b.call([grads[2]], [sizes[0]], costs[0], "g1", out_names=["g1"])
     grads[1] = g1
     return b.auto_release(keep=[g1])
 

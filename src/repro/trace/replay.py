@@ -197,6 +197,103 @@ def replay_budget_curve(logs, *, heuristics=("h_dtr", "h_dtr_eq", "h_lru"),
     return out
 
 
+def static_gap_curve(log: Log, *, fractions=(0.9, 0.7, 0.5),
+                     heuristics=("h_dtr", "h_dtr_eq"),
+                     thrash_factor: float = 10.0,
+                     budget_mode: str = "activation",
+                     max_candidates: int = 512,
+                     execute: bool = False) -> dict:
+    """DTR-vs-static-optimal overhead cells for one captured trace.
+
+    The Checkmate-bridge comparison both ``benchmarks.perf_static`` and
+    the golden gap gate consume: per budget fraction, the LP recompute
+    floor, the model-level solver ladder (heterogeneous DP vs the two
+    Chen baselines on the extracted chain), the best *eval-feasible*
+    static plan from the ``repro.static`` panel (judged by the exact
+    evaluator, so feasibility means the replayed peak truly fits), and
+    the online DTR rows at the same budgets with their gap ratios.
+
+    ``execute=True`` additionally replays each winning plan through the
+    real runtime and records the evaluator-vs-executor parity booleans
+    (plans recur across cells, so executions are cached by keep-set).
+    """
+    from ..static import (best_static_plan, build_frontier, build_view,
+                          chen_greedy, chen_sqrt, compile_plan,
+                          execute_plan, extract_chain, lp_lower_bound,
+                          optimal_dp)
+    peak, base_cost = measure_baseline(log)
+    pinned = log.pinned_bytes()
+    view = build_view(log)
+    chain = extract_chain(view, max_candidates=max_candidates)
+    frontier = build_frontier(view, chain)
+    exec_cache: dict[frozenset, dict] = {}
+    cells = []
+    for f in sorted(fractions, reverse=True):
+        budget = resolve_budget(f, peak, pinned, budget_mode)
+        lp = lp_lower_bound(view, budget)
+        dp = optimal_dp(chain, budget)
+        cs, cg = chen_sqrt(chain, budget), chen_greedy(chain, budget)
+        best = best_static_plan(view, chain, frontier, budget)
+        cell = {
+            "fraction": f, "budget": budget,
+            "lp": {"value": _finite(lp.value), "exact": lp.exact,
+                   "solver": lp.solver, "infeasible": lp.infeasible},
+            "model": {
+                "dp_cost": dp.cost if dp else None,
+                "dp_peak": dp.peak if dp else None,
+                "dp_via": dp.meta.get("via", "dp") if dp else None,
+                "chen_sqrt_cost": cs.cost, "chen_sqrt_peak": cs.peak,
+                "chen_greedy_cost": cg.cost, "chen_greedy_peak": cg.peak,
+                "dp_le_chen": (dp.cost <= min(cs.cost, cg.cost) + 1e-9
+                               if dp else None),
+                "lp_le_dp": (lp.value <= dp.cost + 1e-9
+                             if dp and lp.value != float("inf") else None),
+            },
+            "static": None, "dtr": {},
+        }
+        if best is not None:
+            extra = best.compute - best.ev.base_compute
+            st = {"source": best.source,
+                  "n_drop": len(chain) - len(best.keep),
+                  "peak": best.peak, "compute": best.compute,
+                  "overhead": round(best.overhead, 6),
+                  "remat_ops": best.ev.remat_ops,
+                  "evictions": best.ev.evictions,
+                  "lp_le_extra": (lp.value <= extra + 1e-9
+                                  if lp.value != float("inf") else False)}
+            if execute:
+                if best.keep not in exec_cache:
+                    rr = execute_plan(log, compile_plan(view, chain,
+                                                        best.keep))
+                    exec_cache[best.keep] = {
+                        "remat_match": rr.remat_ops == best.ev.remat_ops,
+                        "evict_match": rr.evictions == best.ev.evictions,
+                        "compute_match":
+                            abs(rr.compute - best.compute) < 1e-9,
+                        "peak_match": rr.peak_memory == best.peak}
+                st["exec"] = exec_cache[best.keep]
+            cell["static"] = st
+        for h in heuristics:
+            r = simulate(log, h, budget, thrash_factor=thrash_factor)
+            row = {"ok": r.ok, "overhead": _finite(round(r.overhead, 6)),
+                   "compute": _finite(r.compute), "peak": r.peak_memory,
+                   "remat_ops": r.remat_ops,
+                   "gap_vs_static": None, "extra_ge_lp": None}
+            if r.ok:
+                row["extra_ge_lp"] = (r.compute - r.base_compute
+                                      >= lp.value - 1e-9)
+                if best is not None:
+                    row["gap_vs_static"] = round(r.compute / best.compute,
+                                                 6)
+            cell["dtr"][h] = row
+        cells.append(cell)
+    return {"trace": log.name, "baseline_peak": peak,
+            "baseline_cost": base_cost, "pinned": pinned,
+            "n_ops": view.n_ops, "n_candidates": len(chain),
+            "frontier_points": len(frontier.points),
+            "frontier_min_peak": frontier.min_peak(), "cells": cells}
+
+
 def smallest_budget(log: Log, heuristic: str = "h_dtr_eq",
                     fractions=DEFAULT_FRACTIONS,
                     budget_mode: str = "activation") -> float | None:
