@@ -98,7 +98,7 @@ def main(argv=()):
     placement = (argv[argv.index("--placement") + 1]
                  if "--placement" in argv else "best_fit")
     report = run(heuristic=heuristic, placement=placement)
-    text = json.dumps(report, indent=2)
+    text = json.dumps(report, indent=2, allow_nan=False)
     if "--out" in argv:
         path = argv[argv.index("--out") + 1]
         with open(path, "w") as f:

@@ -216,7 +216,7 @@ def main(argv=()):
             out_path = argv[i + 1]
     report = run(smoke=smoke)
     with open(out_path, "w") as f:
-        json.dump(report, f, indent=1)
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
     print(f"# wrote {out_path}")
     print("log,heuristic,budget,pick_speedup,wall_speedup,"
           "meta_reduction,equivalent")

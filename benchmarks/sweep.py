@@ -120,7 +120,7 @@ def main(argv=None) -> int:
             print(f"{sw.log_name},{sw.heuristic},{r.budget},{int(r.ok)},"
                   f"{slow},{r.evictions},{r.remat_ops}")
     with open(args.out, "w") as f:
-        json.dump(report, f, indent=1, sort_keys=True)
+        json.dump(report, f, indent=1, sort_keys=True, allow_nan=False)
     print(f"-> {args.out} ({len(report['grid'])} rows, {wall:.2f}s)")
     return 0
 

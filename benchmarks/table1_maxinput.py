@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.core import graphs, simulator
 from repro.core.heuristics import by_name
+from repro.core.runtime import OOMError, ThrashError
 from repro.eager import DTRContext
 
 
@@ -72,7 +73,7 @@ def run_eager_treelstm():
                 peak = (dim * dim + (n_leaves + 2 * n_inner) * dim) * 4
                 return peak <= budget
             return True
-        except Exception:
+        except (OOMError, ThrashError):
             return False
 
     max_plain = max_dtr = 0

@@ -116,6 +116,14 @@ class MemoryPool:
         self._place(blk, sid, size)
         return True
 
+    def resident_sids(self) -> set[int]:
+        """Sids currently owning a block (zero-sized storages never place).
+
+        Public so observers (``repro.check.sanitizer``) can audit
+        pool-vs-runtime residency parity without reaching into the
+        free-list internals."""
+        return set(self._by_sid)
+
     def free(self, sid: int) -> None:
         """Release ``sid``'s block and coalesce with free neighbors."""
         blk = self._by_sid.pop(sid, None)

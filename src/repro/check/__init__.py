@@ -1,0 +1,28 @@
+"""repro.check: static trace verifier, runtime shadow sanitizer, repo lint.
+
+Three independent correctness passes, all runnable via ``python -m
+repro.check`` and gated in CI:
+
+* :mod:`repro.check.trace_lint` — static liveness / remat-closure /
+  alias-pin analysis over ``core.graph.Log`` programs, run automatically
+  before every ``trace.replay.run_trace`` replay;
+* :mod:`repro.check.sanitizer` — a shadow model cross-checking every
+  runtime transition (evict, remat, offload, fetch, banish, death,
+  compaction) plus periodic full-state audits (byte conservation, index
+  parity, union-find root sums), enabled with ``DTRRuntime(...,
+  sanitize=True)`` / ``simulate(..., sanitize=True)``;
+* :mod:`repro.check.lint` — an AST linter for repo-specific rules
+  (``object.__setattr__`` bypasses of the ``StorageRec`` notification
+  hook, non-strict ``json.dump``, swallowed exceptions, heuristic
+  ``key()`` purity).
+"""
+from .lint import LintFinding, lint_paths, lint_source
+from .sanitizer import SanitizerViolation, ShadowSanitizer
+from .trace_lint import (TraceIssue, TraceLintError, check_log, lint_log,
+                         verify_log)
+
+__all__ = [
+    "LintFinding", "lint_paths", "lint_source",
+    "SanitizerViolation", "ShadowSanitizer",
+    "TraceIssue", "TraceLintError", "check_log", "lint_log", "verify_log",
+]

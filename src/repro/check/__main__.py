@@ -1,0 +1,122 @@
+"""``python -m repro.check``: run the correctness passes from CI.
+
+Modes (both run with repo defaults when no flag is given):
+
+* ``--lint PATH...`` — AST-lint every ``.py`` file under the paths
+  (default ``src benchmarks``); exit 1 on any unsuppressed finding.
+* ``--traces DIR`` — statically verify every ``*.log`` golden trace in
+  ``DIR`` (default ``tests/traces``) and replay each one through a
+  sanitized runtime (``sanitize=True``) over a small heuristic × budget
+  grid, including one offload-enabled cell; exit 1 on any lint error or
+  :class:`~repro.check.sanitizer.SanitizerViolation`.  OOM/thrash
+  results are acceptable outcomes (pressure is the point), violations
+  are not.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from .lint import lint_paths
+from .sanitizer import SanitizerViolation
+from .trace_lint import lint_log
+
+#: replay grid for --traces: small but exercises the exact and the
+#: equivalence-class heuristics under real pressure.
+TRACE_HEURISTICS = ("h_dtr", "h_dtr_eq")
+#: train traces thrash below ~0.8 activation (see tests/test_trace_golden);
+#: pressure without guaranteed-thrash keeps the gate fast.
+TRAIN_FRACTIONS = (0.9, 0.8)
+DEFAULT_FRACTIONS = (0.8, 0.5)
+THRASH_FACTOR = 3.0
+#: full-audit cadence for the corpus replays: transition hooks cover every
+#: event regardless; a full O(storages) sweep every 16 ops keeps the CI
+#: step a few seconds while still auditing hundreds of snapshots per run.
+AUDIT_EVERY = 16
+
+
+def run_lint(paths: list[str]) -> int:
+    findings = lint_paths(paths)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"repro.check --lint: {n} finding(s) in {' '.join(paths)}")
+    return 1 if findings else 0
+
+
+def run_traces(trace_dir: str) -> int:
+    # Imports deferred: --lint must not require a working runtime.
+    from ..core.graph import Log
+    from ..core.simulator import measure_baseline, resolve_budget
+    from ..offload import OffloadConfig
+    from ..trace.replay import run_trace
+
+    logs = sorted(Path(trace_dir).glob("*.log"))
+    if not logs:
+        print(f"repro.check --traces: no *.log files in {trace_dir}")
+        return 1
+    failures = 0
+    cells = 0
+    for path in logs:
+        log = Log.loads(path.read_text())
+        issues = lint_log(log)
+        errors = [i for i in issues if i.severity == "error"]
+        for i in errors:
+            print(f"{path.name}: {i}")
+        if errors:
+            failures += 1
+            continue
+        peak, _ = measure_baseline(log)
+        pinned = log.pinned_bytes()
+        fractions = (TRAIN_FRACTIONS if "train" in log.name
+                     else DEFAULT_FRACTIONS)
+        grid = [(h, f, None) for h in TRACE_HEURISTICS for f in fractions]
+        # One offload-enabled cell per trace exercises the host-tier and
+        # byte-conservation checks under prefetch traffic.
+        grid.append(("h_dtr", fractions[-1],
+                     OffloadConfig(host_budget=0.5 * peak,
+                                   h2d_bandwidth=peak, d2h_bandwidth=peak)))
+        for h, f, off in grid:
+            cells += 1
+            budget = resolve_budget(f, peak, pinned, "activation")
+            tag = f"{path.name} {h}@{f}" + (" +offload" if off else "")
+            try:
+                res, _ = run_trace(log, h, budget,
+                                   thrash_factor=THRASH_FACTOR, offload=off,
+                                   sanitize=AUDIT_EVERY)
+            except SanitizerViolation as e:
+                failures += 1
+                print(f"  {tag}: SANITIZER VIOLATION\n{e}")
+                continue
+            print(f"  {tag}: {'ok' if res.ok else res.error_kind}")
+    print(f"repro.check --traces: {len(logs)} trace(s), {cells} sanitized "
+          f"replay cell(s), {failures} failure(s)")
+    return 1 if failures else 0
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.check",
+        description="static trace verifier + sanitized replay + repo lint")
+    ap.add_argument("--lint", nargs="+", metavar="PATH",
+                    help="AST-lint these files/directories")
+    ap.add_argument("--traces", metavar="DIR",
+                    help="verify + sanitized-replay every *.log in DIR")
+    args = ap.parse_args(argv)
+    rc = 0
+    ran = False
+    if args.lint:
+        ran = True
+        rc |= run_lint(args.lint)
+    if args.traces:
+        ran = True
+        rc |= run_traces(args.traces)
+    if not ran:
+        rc = run_lint(["src", "benchmarks"])
+        rc |= run_traces("tests/traces")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,207 @@
+r"""Repo-specific AST lint rules, run by ``python -m repro.check --lint``.
+
+Rules (all repo-specific — generic style is out of scope):
+
+* ``setattr-bypass`` — ``object.__setattr__(s, ...)`` on anything but
+  ``self`` outside ``core/runtime.py``.  ``StorageRec.__setattr__`` is a
+  notification hook: writes to watched fields tell the eviction index to
+  re-band the storage, and a raw ``object.__setattr__`` silently skips
+  that — the index then serves stale victims (the bug class behind the
+  audit of ``offload/engine.py``).
+* ``strict-json`` — every ``json.dump``/``json.dumps`` call must pass
+  ``allow_nan=False``.  All committed BENCH/report payloads are strict
+  JSON (no ``Infinity``/``NaN`` literals) and CI greps for violations;
+  a writer without the flag can silently produce unparseable reports.
+* ``swallowed-exception`` — ``except:`` / ``except Exception:`` /
+  ``except BaseException:`` that neither binds the exception (``as e``
+  followed by reporting is the legitimate driver-loop pattern) nor
+  re-``raise``\ s anywhere in the handler body.  PR 8 fixed a real
+  instance (a bare except faking chen_sqrt feasibility); handlers must
+  name the types they expect, surface the error, or re-raise.
+* ``key-purity`` — in a ``Heuristic`` subclass declaring
+  ``separable = True``, the ``key(self, rt, s)`` method may read only
+  the storage fields the eviction index subscribes to
+  (``local_cost``, ``dead_cost``, ``size``, ``sid``) and must not read
+  ``rt.clock`` / ``rt.staleness`` (staleness belongs in the shared
+  denominator, not the banded key — a clock-dependent key would go
+  stale without any invalidation event).
+
+Suppression: append ``# repro-lint: allow[rule-name]`` to the flagged
+line (or the line directly above it).
+"""
+from __future__ import annotations
+
+import ast
+import re
+from dataclasses import dataclass
+from pathlib import Path
+
+ALLOW_RE = re.compile(r"#\s*repro-lint:\s*allow\[([a-z0-9_,\- ]+)\]")
+
+#: storage attributes a separable ``key()`` may read — the fields whose
+#: writes notify the eviction index (plus the immutable size/sid).
+KEY_ALLOWED_S_FIELDS = frozenset(("local_cost", "dead_cost", "size", "sid"))
+#: runtime attributes a separable ``key()`` must NOT read.
+KEY_FORBIDDEN_RT_FIELDS = frozenset(("clock", "staleness"))
+
+
+@dataclass(frozen=True)
+class LintFinding:
+    path: str
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] " \
+               f"{self.message}"
+
+
+def _suppressions(src: str) -> dict[int, set[str]]:
+    """Line number -> rule names allowed there (flagged line or line above)."""
+    out: dict[int, set[str]] = {}
+    for lineno, line in enumerate(src.splitlines(), start=1):
+        m = ALLOW_RE.search(line)
+        if m:
+            rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+            out.setdefault(lineno, set()).update(rules)
+            out.setdefault(lineno + 1, set()).update(rules)
+    return out
+
+
+class _Visitor(ast.NodeVisitor):
+    def __init__(self, path: str, allow_setattr_bypass: bool) -> None:
+        self.path = path
+        self.allow_setattr_bypass = allow_setattr_bypass
+        self.findings: list[LintFinding] = []
+
+    def _add(self, node: ast.AST, rule: str, message: str) -> None:
+        self.findings.append(LintFinding(
+            self.path, getattr(node, "lineno", 0),
+            getattr(node, "col_offset", 0), rule, message))
+
+    # -- setattr-bypass ----------------------------------------------------
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if (isinstance(f, ast.Attribute) and f.attr == "__setattr__"
+                and isinstance(f.value, ast.Name) and f.value.id == "object"
+                and not self.allow_setattr_bypass):
+            target = node.args[0] if node.args else None
+            if not (isinstance(target, ast.Name) and target.id == "self"):
+                self._add(node, "setattr-bypass",
+                          "object.__setattr__ bypasses the StorageRec "
+                          "notification hook the eviction index depends "
+                          "on; write the attribute normally or move the "
+                          "code into core/runtime.py")
+        if (isinstance(f, ast.Attribute)
+                and f.attr in ("dump", "dumps")
+                and isinstance(f.value, ast.Name) and f.value.id == "json"):
+            strict = any(
+                kw.arg == "allow_nan"
+                and isinstance(kw.value, ast.Constant)
+                and kw.value.value is False
+                for kw in node.keywords)
+            if not strict:
+                self._add(node, "strict-json",
+                          f"json.{f.attr} without allow_nan=False can "
+                          f"emit Infinity/NaN literals no strict parser "
+                          f"accepts; all report writers must be strict")
+        self.generic_visit(node)
+
+    # -- swallowed-exception -------------------------------------------------
+    def visit_ExceptHandler(self, node: ast.ExceptHandler) -> None:
+        broad = (node.type is None
+                 or (isinstance(node.type, ast.Name)
+                     and node.type.id in ("Exception", "BaseException")))
+        if broad and node.name is None:
+            reraises = any(isinstance(n, ast.Raise)
+                           for n in ast.walk(node))
+            if not reraises:
+                what = ("bare except"
+                        if node.type is None
+                        else f"except {node.type.id}")  # type: ignore[union-attr]
+                self._add(node, "swallowed-exception",
+                          f"{what}: swallows every error without "
+                          f"re-raising; name the exception types this "
+                          f"handler actually expects")
+        self.generic_visit(node)
+
+    # -- key-purity -------------------------------------------------------
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        separable = False
+        for stmt in node.body:
+            if (isinstance(stmt, ast.Assign)
+                    and any(isinstance(t, ast.Name) and t.id == "separable"
+                            for t in stmt.targets)
+                    and isinstance(stmt.value, ast.Constant)
+                    and stmt.value.value is True):
+                separable = True
+            if (isinstance(stmt, ast.AnnAssign)
+                    and isinstance(stmt.target, ast.Name)
+                    and stmt.target.id == "separable"
+                    and isinstance(stmt.value, ast.Constant)
+                    and stmt.value.value is True):
+                separable = True
+        if separable:
+            for stmt in node.body:
+                if (isinstance(stmt, ast.FunctionDef)
+                        and stmt.name == "key"):
+                    self._check_key_purity(stmt)
+        self.generic_visit(node)
+
+    def _check_key_purity(self, fn: ast.FunctionDef) -> None:
+        args = [a.arg for a in fn.args.args]
+        if len(args) < 3:
+            return
+        rt_name, s_name = args[1], args[2]
+        for n in ast.walk(fn):
+            if not (isinstance(n, ast.Attribute)
+                    and isinstance(n.ctx, ast.Load)
+                    and isinstance(n.value, ast.Name)):
+                continue
+            base = n.value.id
+            if base == s_name and n.attr not in KEY_ALLOWED_S_FIELDS:
+                self._add(n, "key-purity",
+                          f"separable key() reads {s_name}.{n.attr}, "
+                          f"outside the invalidation-subscribed set "
+                          f"{sorted(KEY_ALLOWED_S_FIELDS)}; the eviction "
+                          f"index would serve stale keys")
+            elif base == rt_name and n.attr in KEY_FORBIDDEN_RT_FIELDS:
+                self._add(n, "key-purity",
+                          f"separable key() reads {rt_name}.{n.attr}; "
+                          f"clock-dependent terms belong in the shared "
+                          f"staleness denominator, not the banded key")
+
+
+def lint_source(src: str, path: str = "<string>") -> list[LintFinding]:
+    """Lint one Python source string; returns unsuppressed findings."""
+    allow_bypass = path.replace("\\", "/").endswith("core/runtime.py")
+    try:
+        tree = ast.parse(src, filename=path)
+    except SyntaxError as e:
+        return [LintFinding(path, e.lineno or 0, e.offset or 0,
+                            "syntax-error", str(e.msg))]
+    v = _Visitor(path, allow_bypass)
+    v.visit(tree)
+    sup = _suppressions(src)
+    return [f for f in v.findings
+            if f.rule not in sup.get(f.line, ())]
+
+
+def lint_paths(paths: list[str]) -> list[LintFinding]:
+    """Lint every ``.py`` file under ``paths`` (files or directories)."""
+    files: list[Path] = []
+    for p in paths:
+        pp = Path(p)
+        if pp.is_dir():
+            files.extend(sorted(
+                f for f in pp.rglob("*.py")
+                if "__pycache__" not in f.parts
+                and not any(part.startswith(".") for part in f.parts)))
+        elif pp.suffix == ".py":
+            files.append(pp)
+    findings: list[LintFinding] = []
+    for f in files:
+        findings.extend(lint_source(f.read_text(), str(f)))
+    return findings

@@ -62,7 +62,7 @@ def save_checkpoint(directory: str, step: int, tree: Any,
             "extra": extra or {},
         }
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
-            json.dump(manifest, f)
+            json.dump(manifest, f, allow_nan=False)
         if os.path.exists(final):
             shutil.rmtree(final)
         os.rename(tmp, final)

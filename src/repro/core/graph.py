@@ -132,7 +132,7 @@ class Log:
                   "name": self.name}
         if self.meta:
             header["meta"] = self.meta
-        out = [json.dumps(header)]
+        out = [json.dumps(header, allow_nan=False)]
         for ins in self.instrs:
             d = {"kind": type(ins).__name__}
             for k in ins.__dataclass_fields__:
@@ -142,7 +142,7 @@ class Log:
                         d[k] = [list(p) for p in v]
                     continue
                 d[k] = v
-            out.append(json.dumps(d))
+            out.append(json.dumps(d, allow_nan=False))
         return "\n".join(out)
 
     @staticmethod

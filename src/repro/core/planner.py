@@ -39,17 +39,20 @@ from .runtime import DTRRuntime, OOMError
 # ---------------------------------------------------------------------------
 
 def _aval_bytes(aval) -> int:
+    # Abstract tokens / effect avals lack shape/dtype (AttributeError);
+    # extended dtypes without an itemsize raise TypeError.  Anything else
+    # (a malformed shape, a numpy overflow) is a real bug and propagates.
     try:
         return int(np.prod(aval.shape, dtype=np.int64)
                    * jnp.dtype(aval.dtype).itemsize)
-    except Exception:
+    except (AttributeError, TypeError):
         return 0
 
 
 def _aval_elems(aval) -> int:
     try:
         return int(np.prod(aval.shape, dtype=np.int64))
-    except Exception:
+    except (AttributeError, TypeError):
         return 0
 
 

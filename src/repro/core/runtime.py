@@ -143,6 +143,10 @@ class DTRRuntime:
         fetch_fn: Optional[Callable] = None,    # eager hook: bytes -> device
         faults=None,                        # repro.faults FaultConfig|Schedule
         recovery: Optional[RecoveryConfig] = None,  # degradation ladder
+        sanitize=False,                     # repro.check shadow sanitizer:
+        #                                     True = audit every op, int N =
+        #                                     audit every N ops (transition
+        #                                     hooks always on when enabled)
     ) -> None:
         assert dealloc in ("ignore", "eager", "banish")
         self.budget = float(budget)
@@ -184,6 +188,14 @@ class DTRRuntime:
         self._w_ops = 0                 # thrash-guard sliding window
         self._w_total = 0.0
         self._w_base = 0.0
+        # Shadow sanitizer (repro.check): a pure observer — it reads state
+        # through non-mutating, non-counting paths, so a sanitized run is
+        # bit-exact with an unsanitized one (tested in tests/test_check.py).
+        if sanitize:
+            from ..check.sanitizer import attach as _sanitizer_attach
+            self.sanitizer = _sanitizer_attach(self, sanitize)
+        else:
+            self.sanitizer = None
 
         self.tensors: dict[int, TensorRec] = {}
         self.storages: dict[int, StorageRec] = {}
@@ -410,6 +422,8 @@ class DTRRuntime:
             if t.refs > 0 and not self.storages[t.sid].banished:
                 self._ensure_defined([t.tid])
                 self.storages[t.sid].locks += 1
+        if self.sanitizer is not None:
+            self.sanitizer.audit()
 
     # -- introspection (benchmarks / adversary) -------------------------
     def resident_tids(self) -> set[int]:
@@ -595,6 +609,8 @@ class DTRRuntime:
                         self._try_banish(s)
             if self.offload is not None:
                 self.offload.pump(self)
+            if self.sanitizer is not None:
+                self.sanitizer.on_op()
         finally:
             for sid in in_sids:
                 self.storages[sid].locks -= 1
@@ -694,6 +710,8 @@ class DTRRuntime:
         return best
 
     def _evict(self, s: StorageRec) -> None:
+        if self.sanitizer is not None:
+            self.sanitizer.pre_evict(s)
         assert s.evictable(), f"evicting unevictable storage {s.sid}"
         s.resident = False
         for tid in s.tensor_tids:
@@ -785,6 +803,9 @@ class DTRRuntime:
             tried.add("compact")
             st = self.allocator.pool.stats()
             self.allocator.pool.compact()
+            if self.sanitizer is not None:
+                self.sanitizer.note_compaction(
+                    st, self.allocator.pool.stats())
             self._degrade("compaction", free=st.free,
                           largest_free=st.largest_free)
             return True
@@ -943,6 +964,8 @@ class DTRRuntime:
         evicted components: an offloaded storage needs no remat, so
         neighboring e*/ẽ* closures are unchanged.
         """
+        if self.sanitizer is not None:
+            self.sanitizer.pre_offload(s)
         assert s.evictable(), f"offloading unevictable storage {s.sid}"
         defined = tuple(tid for tid in s.tensor_tids
                         if self.tensors[tid].defined)
@@ -966,6 +989,8 @@ class DTRRuntime:
         space is allocated now (evicting/offloading further victims if
         needed) and the clock stalls for the full synchronous H2D copy.
         """
+        if self.sanitizer is not None:
+            self.sanitizer.pre_fetch(s)
         eng = self.offload
         if eng.in_flight(s.sid):
             rec = eng._recs[s.sid]
@@ -1162,6 +1187,8 @@ class DTRRuntime:
                     stack.append(p)
 
     def _kill(self, x: StorageRec) -> None:
+        if self.sanitizer is not None:
+            self.sanitizer.pre_kill(x)
         x.dead = True
         if x.offloaded:
             # A dead host copy can never be fetched again: drop it (and
@@ -1264,6 +1291,8 @@ class DTRRuntime:
                 self._pending_banish.add(s.sid)
                 return
         self._pending_banish.discard(s.sid)
+        if self.sanitizer is not None:
+            self.sanitizer.pre_banish(s)
         if s.offloaded:
             # Banish drops the host copy too: permanent free means the
             # bytes are gone from every tier.

@@ -192,6 +192,7 @@ def simulate(
     offload=None,
     faults=None,
     recovery=None,
+    sanitize=False,
 ) -> RunResult:
     h = by_name(heuristic, seed) if isinstance(heuristic, str) else heuristic
     engine = None
@@ -208,7 +209,7 @@ def simulate(
                     compute_limit=thrash_factor * log.baseline_cost(),
                     allocator=make_allocator(alloc_mode, placement),
                     index=index, offload=engine,
-                    faults=faults, recovery=recovery)
+                    faults=faults, recovery=recovery, sanitize=sanitize)
     try:
         replay(log, rt)
     except (OOMError, ThrashError) as e:

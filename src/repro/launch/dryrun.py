@@ -252,7 +252,7 @@ def main():
                                  remat=args.remat)
                 path = os.path.join(args.out, tag + ".json")
                 with open(path, "w") as f:
-                    json.dump(res, f, indent=1)
+                    json.dump(res, f, indent=1, allow_nan=False)
                 r = res["roofline"]
                 print(f"OK   {tag}: compile={res['compile_s']:.1f}s "
                       f"mem/dev={res['memory']['peak_bytes_per_device']/2**30:.2f}GiB "

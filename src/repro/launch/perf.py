@@ -132,7 +132,7 @@ def run_cell(cell: str, multi_pod: bool, out_dir: str):
                        wall_s=time.time() - t0)
             tag = f"{arch}_{shape}_{name}"
             with open(os.path.join(out_dir, tag + ".json"), "w") as f:
-                json.dump(res, f, indent=1)
+                json.dump(res, f, indent=1, allow_nan=False)
         except Exception as e:
             row = dict(variant=name, hypothesis=hypothesis, error=repr(e))
         results.append(row)

@@ -224,7 +224,13 @@ class OffloadEngine:
             if rt.allocator is not None:
                 rt.allocator.free(s)
             rt.prefetch_cancelled += 1
-        object.__setattr__(s, "offloaded", False)
+        # Plain write on purpose: "offloaded" is not in StorageRec._WATCHED
+        # (offload membership moves with "resident", which the runtime
+        # flips around every transfer), so this never pings the index —
+        # but going through __setattr__ keeps that true by construction if
+        # the watched set ever grows.  The drop callers (_kill /
+        # _try_banish) mark the sid dirty themselves where needed.
+        s.offloaded = False
 
 
 # ---------------------------------------------------------------------------

@@ -17,6 +17,7 @@ from __future__ import annotations
 
 from dataclasses import asdict
 
+from ..check.trace_lint import check_log
 from ..core.graph import Log, replay
 from ..core.heuristics import ALL_NAMES, by_name
 from ..core.runtime import DTRRuntime, OOMError, ThrashError
@@ -35,7 +36,7 @@ DEFAULT_FRACTIONS = (0.9, 0.7, 0.5, 0.4, 0.3)
 def run_trace(log: Log, heuristic: str, budget: float, *,
               dealloc: str = "eager", index: bool = True, seed: int = 0,
               thrash_factor: float = 50.0, offload=None, faults=None,
-              recovery=None):
+              recovery=None, lint: bool = True, sanitize=False):
     """Replay ``log`` once; returns (RunResult, victim sid sequence).
 
     ``offload`` (an enabled ``repro.offload.OffloadConfig``) attaches the
@@ -46,7 +47,15 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
     attach a replayable chaos schedule and the degradation ladder; the
     golden fault-replay tests pin the victim sequence *and* the structured
     event stream of pinned schedules.
+
+    ``lint`` statically verifies the log before replay (memoized per log
+    object, so sweeps pay it once); ``sanitize`` attaches the
+    ``repro.check`` shadow sanitizer to the runtime.  Both raise through:
+    a ``TraceLintError`` / ``SanitizerViolation`` is a defect, not a
+    replay outcome.
     """
+    if lint:
+        check_log(log, dealloc=dealloc)
     h = by_name(heuristic, seed)
     engine = None
     if offload is not None and offload.enabled:
@@ -57,7 +66,7 @@ def run_trace(log: Log, heuristic: str, budget: float, *,
                     dealloc=dealloc, seed=seed,
                     compute_limit=thrash_factor * log.baseline_cost(),
                     index=index, offload=engine,
-                    faults=faults, recovery=recovery)
+                    faults=faults, recovery=recovery, sanitize=sanitize)
     victims: list[int] = []
     inner = rt._evict
 

@@ -1,0 +1,653 @@
+"""Tests for ``repro.check``: trace verifier, shadow sanitizer, repo lint.
+
+Four layers:
+
+1. **Trace lint** — hand-built malformed logs trigger every error code the
+   static verifier defines; the whole golden corpus lints clean under both
+   ``eager`` and ``banish``; ``run_trace`` refuses malformed logs *before*
+   any replay runs.
+2. **Sanitizer transparency** — a sanitized replay is bit-exact with an
+   unsanitized one (parity counters and victim sequences), and the golden
+   corpus replays sanitized with zero violations (no false positives).
+3. **Seeded mutations** — deliberately corrupted runtime state (double
+   free, evict-pinned, index desync, broken union-find root sum, illegal
+   offload transitions, byte-counter drift, ...) raises a structured
+   :class:`SanitizerViolation` with the expected ``.code``.
+4. **Repo lint rules + satellite regressions** — each AST rule fires on a
+   minimal snippet and respects the suppression comment; the tightened
+   ``except`` blocks in ``trace.capture`` / ``core.planner`` now propagate
+   unexpected errors; the ``offload.engine.drop`` write goes through the
+   ``StorageRec`` notification hook.
+"""
+import json
+import os
+
+import pytest
+
+from repro.check import (SanitizerViolation, TraceLintError, lint_paths,
+                         lint_source)
+from repro.check.sanitizer import ShadowSanitizer
+from repro.check.trace_lint import check_log, lint_log, verify_log
+from repro.core import graphs
+from repro.core.graph import (Alias, Call, Constant, Log, LogBuilder, Memory,
+                              Mutate, Release)
+from repro.core.heuristics import by_name
+from repro.core.runtime import DTRRuntime, StorageRec
+from repro.core.simulator import measure_baseline, resolve_budget
+from repro.offload import OffloadConfig, OffloadEngine, wrap_heuristic
+from repro.trace.replay import PARITY_FIELDS, run_trace
+
+TRACE_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                         "traces")
+TRACES = ["serve_smoke_s2", "serve_smoke_s4", "train_smoke", "eager_mlp",
+          "treelstm", "random_dag"]
+
+
+def load_trace(name: str) -> Log:
+    with open(os.path.join(TRACE_DIR, f"{name}.log")) as f:
+        return Log.loads(f.read())
+
+
+def errors_of(log: Log, dealloc: str = "eager") -> set[str]:
+    return {i.code for i in lint_log(log, dealloc=dealloc)
+            if i.severity == "error"}
+
+
+# ---------------------------------------------------------------------------
+# 1. Trace lint
+# ---------------------------------------------------------------------------
+
+class TestTraceLint:
+    def test_clean_synthetic_log(self):
+        log = graphs.mlp(depth=6, width=8, batch=4)
+        for dealloc in ("eager", "banish"):
+            assert not errors_of(log, dealloc)
+
+    def test_use_after_release(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        b.release(x)
+        b.call([x], [8], 1.0, "g")          # x's refcount already zero
+        assert "use-after-release" in errors_of(b.log)
+
+    def test_use_after_banish(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        b.release(x)
+        b.call([x], [8], 1.0, "g")
+        codes = errors_of(b.log, dealloc="banish")
+        assert "use-after-banish" in codes
+        assert "use-after-release" not in codes
+
+    def test_undefined_tensor(self):
+        b = LogBuilder("bad")
+        b.call(["ghost"], [8], 1.0, "f")
+        assert "undefined-tensor" in errors_of(b.log)
+
+    def test_release_underflow(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        b.release(c)
+        b.release(c)
+        assert "release-underflow" in errors_of(b.log)
+
+    def test_malformed_call_block(self):
+        # CALL whose MEMORY/ALIAS block is missing entirely.
+        log = Log([Constant("c"), Memory("c", 4),
+                   Call(("c",), ("x",), 1.0, "f")], name="bad")
+        assert "malformed-call-block" in errors_of(log)
+
+    def test_malformed_constant(self):
+        log = Log([Constant("c"),
+                   Call((), ("x",), 1.0, "f"),
+                   Memory("x", 4), Alias("x", None)], name="bad")
+        assert "malformed-constant" in errors_of(log)
+
+    def test_alias_with_nonzero_size(self):
+        log = Log([Constant("c"), Memory("c", 4),
+                   Call(("c",), ("x",), 1.0, "f"),
+                   Memory("x", 16), Alias("x", "c")], name="bad")
+        assert "alias-size" in errors_of(log)
+
+    def test_mutate_target_not_input(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        b.log.instrs.append(Mutate((c,), (x,), 1.0, "mut"))
+        assert "mutate-not-input" in errors_of(b.log)
+
+    def test_nan_cost_rejected(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        b.call([c], [8], float("nan"), "f")
+        assert "bad-cost" in errors_of(b.log)
+
+    def test_negative_size_rejected(self):
+        log = Log([Constant("c"), Memory("c", -4)], name="bad")
+        assert "bad-size" in errors_of(log)
+
+    def test_stray_metadata_warns(self):
+        log = Log([Constant("c"), Memory("c", 4), Memory("c", 4)],
+                  name="odd")
+        issues = lint_log(log)
+        assert any(i.code == "stray-metadata" and i.severity == "warning"
+                   for i in issues)
+        assert not errors_of(log)
+
+    def test_banish_pinning_shields_children(self):
+        # y is x's child when x banishes, so the banish path pins y: an
+        # evicted y needs no recompute.  Well-formed logs stay clean.
+        b = LogBuilder("ok")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        (y,) = b.call([x], [8], 1.0, "g")
+        b.release(x)
+        b.call([y, y], [8], 1.0, "h")
+        issues = lint_log(b.log, dealloc="banish")
+        assert all(i.severity != "error" for i in issues)
+
+    def test_unreachable_recompute_under_banish(self):
+        # A hand-edited log that defines y *from* an already-banished x:
+        # y's recompute closure crosses the banished storage with no
+        # pinned shield, so an evicted y could never be rematerialized.
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        b.release(x)                        # refcount 0 => banished
+        (y,) = b.call([x], [8], 1.0, "g")   # use-after-banish ...
+        b.call([y], [8], 1.0, "h")          # ... and y is unrecomputable
+        codes = errors_of(b.log, dealloc="banish")
+        assert "use-after-banish" in codes
+        assert "unreachable-recompute" in codes
+        # The same log replayed under "eager" never banishes: the second
+        # error degrades to plain use-after-release and y stays safe.
+        eager = errors_of(b.log, dealloc="eager")
+        assert "unreachable-recompute" not in eager
+
+    def test_verify_log_raises_with_issues(self):
+        b = LogBuilder("bad")
+        b.call(["ghost"], [8], 1.0, "f")
+        with pytest.raises(TraceLintError) as ei:
+            verify_log(b.log)
+        assert any(i.code == "undefined-tensor" for i in ei.value.issues)
+        assert "bad" in str(ei.value)
+
+    def test_check_log_memoizes_verdict(self):
+        log = graphs.mlp(depth=4, width=8, batch=4)
+        check_log(log)
+        assert log._lint_verdict["eager"] is True
+        b = LogBuilder("bad")
+        b.call(["ghost"], [8], 1.0, "f")
+        with pytest.raises(TraceLintError) as first:
+            check_log(b.log)
+        with pytest.raises(TraceLintError) as second:
+            check_log(b.log)
+        assert second.value is first.value      # cached exception object
+
+    def test_run_trace_lints_before_replay(self):
+        b = LogBuilder("bad")
+        c = b.constant(4)
+        (x,) = b.call([c], [8], 1.0, "f")
+        b.release(x)
+        b.call([x], [8], 1.0, "g")
+        with pytest.raises(TraceLintError):
+            run_trace(b.log, "h_dtr", budget=1e9)
+        # Opt-out for callers that replay known-odd logs deliberately.
+        res, _ = run_trace(b.log, "h_dtr", budget=1e9, lint=False)
+        assert res.ok
+
+    @pytest.mark.parametrize("name", TRACES)
+    def test_golden_corpus_lints_clean(self, name):
+        log = load_trace(name)
+        for dealloc in ("eager", "banish"):
+            issues = lint_log(log, dealloc=dealloc)
+            assert not [i for i in issues if i.severity == "error"], \
+                [str(i) for i in issues]
+
+
+# ---------------------------------------------------------------------------
+# 2. Sanitizer transparency (no false positives, bit-exactness)
+# ---------------------------------------------------------------------------
+
+class TestSanitizerTransparency:
+    @pytest.mark.parametrize("name", TRACES)
+    def test_golden_corpus_sanitized_replay_is_clean_and_bit_exact(
+            self, name):
+        log = load_trace(name)
+        peak, _ = measure_baseline(log)
+        frac = 0.9 if name == "train_smoke" else 0.7
+        budget = resolve_budget(frac, peak, log.pinned_bytes(), "activation")
+        plain, v_plain = run_trace(log, "h_dtr_eq", budget, thrash_factor=3.0)
+        san, v_san = run_trace(log, "h_dtr_eq", budget, thrash_factor=3.0,
+                               sanitize=True)
+        assert v_plain == v_san
+        for f in PARITY_FIELDS:
+            assert getattr(plain, f) == getattr(san, f), f
+
+    def test_sanitized_offload_replay_is_clean(self):
+        log = graphs.mlp(depth=12, width=32, batch=8)
+        peak, _ = measure_baseline(log)
+        cfg = OffloadConfig(host_budget=0.5 * peak, h2d_bandwidth=peak,
+                            d2h_bandwidth=peak)
+        budget = resolve_budget(0.5, peak, log.pinned_bytes(), "activation")
+        res, _ = run_trace(log, "h_dtr", budget, thrash_factor=10.0,
+                           offload=cfg, sanitize=True)
+        assert res.error_kind != "violation"
+
+    @pytest.mark.parametrize("alloc_mode", ["pool", "pool_nofrag"])
+    def test_sanitized_pool_replay_is_clean_and_bit_exact(self, alloc_mode):
+        from repro.core.simulator import simulate
+        log = graphs.mlp(depth=10, width=16, batch=8)
+        peak, _ = measure_baseline(log)
+        budget = resolve_budget(0.7, peak, log.pinned_bytes(), "activation")
+        plain = simulate(log, "h_dtr", budget, thrash_factor=10.0,
+                         alloc_mode=alloc_mode)
+        san = simulate(log, "h_dtr", budget, thrash_factor=10.0,
+                       alloc_mode=alloc_mode, sanitize=True)
+        for f in PARITY_FIELDS:
+            assert getattr(plain, f) == getattr(san, f), f
+
+    def test_audit_cadence(self):
+        log = graphs.mlp(depth=8, width=16, batch=4)
+        peak, _ = measure_baseline(log)
+        budget = resolve_budget(0.7, peak, log.pinned_bytes(), "activation")
+        run_trace(log, "h_dtr", budget, sanitize=True)
+        # sanitize=N audits every N ops; transition hooks stay on.
+        _, _ = run_trace(log, "h_dtr", budget, sanitize=1000)
+
+
+# ---------------------------------------------------------------------------
+# 3. Seeded mutations: every corruption is detected
+# ---------------------------------------------------------------------------
+
+def _sanitized_runtime(heuristic="h_dtr_eq", offload=False, budget=1e9):
+    """Small live runtime: constant + chain, one evicted storage."""
+    eng = None
+    h = by_name(heuristic)
+    if offload:
+        eng = OffloadEngine(OffloadConfig(host_budget=1000.0,
+                                          prefetch=False))
+        h = wrap_heuristic(by_name("h_dtr_local"), eng)
+    rt = DTRRuntime(budget=budget, heuristic=h, offload=eng, sanitize=True)
+    c = rt.constant(10)
+    (a,) = rt.call("a", 1.0, [c], [40])
+    (bb,) = rt.call("b", 2.0, [a], [40])
+    (d,) = rt.call("d", 4.0, [bb], [40])
+    return rt, (c, a, bb, d)
+
+
+class TestSeededMutations:
+    """Each test corrupts one invariant and expects its violation code."""
+
+    def _storage(self, rt, tid):
+        return rt.storages[rt.tensors[tid].sid]
+
+    def test_double_free(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        s = self._storage(rt, a)
+        rt._evict(s)
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._evict(s)                     # second evict = double free
+        assert ei.value.code == "evict-nonresident"
+
+    def test_evict_pinned(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        s = self._storage(rt, a)
+        s.pinned = True
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._evict(s)
+        assert ei.value.code == "evict-pinned"
+
+    def test_evict_constant(self):
+        rt, (c, _, _, _) = _sanitized_runtime()
+        s = self._storage(rt, c)
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._evict(s)
+        assert ei.value.code in ("evict-constant", "evict-pinned")
+
+    def test_evict_locked(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        s = self._storage(rt, a)
+        s.locks += 1
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._evict(s)
+        assert ei.value.code == "evict-locked"
+
+    def test_index_desync(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        sid = rt.tensors[a].sid
+        rt.index.members.discard(sid)         # index forgets a candidate
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "index-desync"
+        assert sid in ei.value.state["missing"]
+
+    def test_broken_uf_root_sum(self):
+        rt, (_, a, _, _) = _sanitized_runtime("h_dtr_eq")
+        s = self._storage(rt, a)
+        rt._evict(s)                          # joins the evicted component
+        assert s.uf_joined
+        rt.uf._cost[rt.uf.find(s.uf)] += 5.0  # corrupt the cached sum
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "uf-root-sum"
+
+    def test_byte_counter_drift(self):
+        rt, _ = _sanitized_runtime()
+        rt.memory += 7.0                      # phantom bytes
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "byte-conservation"
+
+    def test_peak_below_memory(self):
+        rt, _ = _sanitized_runtime()
+        rt.peak_memory = rt.memory - 1.0
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "peak-below-memory"
+
+    def test_refs_desync(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        self._storage(rt, a).refs += 1        # cached sum drifts from views
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "refs-desync"
+
+    def test_dead_with_live_refs(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        self._storage(rt, a).dead = True
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "dead-live"
+
+    def test_defined_view_on_evicted_storage(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        s = self._storage(rt, a)
+        rt._evict(s)
+        rt.tensors[a].defined = True          # lies about materialization
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "defined-nonresident"
+
+    def test_illegal_offload_double(self):
+        rt, (_, a, _, _) = _sanitized_runtime(offload=True)
+        s = self._storage(rt, a)
+        rt._offload(s)
+        s.resident = True                     # fake a re-materialization
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._offload(s)
+        assert ei.value.code == "offload-already"
+
+    def test_illegal_fetch_of_non_offloaded(self):
+        rt, (_, a, _, _) = _sanitized_runtime(offload=True)
+        s = self._storage(rt, a)
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._fetch_in(s)
+        assert ei.value.code == "fetch-not-offloaded"
+
+    def test_resident_and_offloaded(self):
+        rt, (_, a, _, _) = _sanitized_runtime(offload=True)
+        s = self._storage(rt, a)
+        rt._offload(s)
+        s.resident = True                     # both tiers at once
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "resident-and-offloaded"
+
+    def test_host_tier_desync(self):
+        rt, (_, a, bb, _) = _sanitized_runtime(offload=True)
+        s = self._storage(rt, bb)
+        rt._evict(s)
+        s.offloaded = True                    # flag without engine record
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "host-desync"
+
+    def test_pool_desync(self):
+        from repro.alloc import PoolAllocator
+        h = by_name("h_dtr")
+        rt = DTRRuntime(budget=1e9, heuristic=h, sanitize=True,
+                        allocator=PoolAllocator(contiguous=True))
+        c = rt.constant(10)
+        (a,) = rt.call("a", 1.0, [c], [40])
+        rt.sanitizer.audit()                  # consistent so far
+        rt.allocator.pool.free(rt.tensors[a].sid)   # behind the runtime
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.audit()
+        assert ei.value.code == "pool-desync"
+
+    def test_compaction_must_conserve_free_bytes(self):
+        rt, _ = _sanitized_runtime()
+
+        class _Stats:
+            def __init__(self, free, largest):
+                self.free, self.largest_free = free, largest
+
+            def as_dict(self):
+                return {"free": self.free, "largest_free": self.largest_free}
+
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.note_compaction(_Stats(100.0, 50.0),
+                                         _Stats(90.0, 90.0))
+        assert ei.value.code == "compaction-leak"
+        with pytest.raises(SanitizerViolation) as ei:
+            rt.sanitizer.note_compaction(_Stats(100.0, 50.0),
+                                         _Stats(100.0, 40.0))
+        assert ei.value.code == "compaction-fragmented"
+
+    def test_violation_carries_state_dump(self):
+        rt, (_, a, _, _) = _sanitized_runtime()
+        s = self._storage(rt, a)
+        s.pinned = True
+        with pytest.raises(SanitizerViolation) as ei:
+            rt._evict(s)
+        e = ei.value
+        assert e.state["sid"] == s.sid and e.state["pinned"] is True
+        assert "clock" in e.state and "[evict-pinned]" in str(e)
+
+
+# ---------------------------------------------------------------------------
+# 4a. Repo lint rules
+# ---------------------------------------------------------------------------
+
+class TestRepoLint:
+    def _rules(self, src, path="pkg/mod.py"):
+        return [f.rule for f in lint_source(src, path)]
+
+    def test_setattr_bypass_flagged(self):
+        src = "object.__setattr__(s, 'resident', False)\n"
+        assert self._rules(src) == ["setattr-bypass"]
+
+    def test_setattr_on_self_allowed(self):
+        src = ("class A:\n"
+               "    def __setattr__(self, k, v):\n"
+               "        object.__setattr__(self, k, v)\n")
+        assert self._rules(src) == []
+
+    def test_setattr_allowed_in_runtime_module(self):
+        src = "object.__setattr__(s, 'resident', False)\n"
+        assert self._rules(src, "src/repro/core/runtime.py") == []
+
+    def test_strict_json_flagged(self):
+        assert self._rules("json.dump(x, f)\n") == ["strict-json"]
+        assert self._rules("json.dumps(x, allow_nan=True)\n") == \
+            ["strict-json"]
+        assert self._rules("json.dump(x, f, allow_nan=False)\n") == []
+
+    def test_swallowed_exception_flagged(self):
+        src = ("try:\n    f()\nexcept Exception:\n    pass\n")
+        assert self._rules(src) == ["swallowed-exception"]
+        src = ("try:\n    f()\nexcept:\n    pass\n")
+        assert self._rules(src) == ["swallowed-exception"]
+
+    def test_narrow_or_reraising_handlers_allowed(self):
+        assert self._rules(
+            "try:\n    f()\nexcept ValueError:\n    pass\n") == []
+        assert self._rules(
+            "try:\n    f()\nexcept Exception as e:\n    log(e)\n") == []
+        assert self._rules(
+            "try:\n    f()\nexcept Exception:\n    raise\n") == []
+
+    def test_key_purity_flagged(self):
+        src = ("class H(Heuristic):\n"
+               "    separable = True\n"
+               "    def key(self, rt, s):\n"
+               "        return s.last_access / s.size\n")
+        assert self._rules(src) == ["key-purity"]
+        src = ("class H(Heuristic):\n"
+               "    separable = True\n"
+               "    def key(self, rt, s):\n"
+               "        return rt.clock * s.size\n")
+        assert self._rules(src) == ["key-purity"]
+
+    def test_key_purity_allows_subscribed_fields(self):
+        src = ("class H(Heuristic):\n"
+               "    separable = True\n"
+               "    def key(self, rt, s):\n"
+               "        return (s.local_cost + s.dead_cost) / s.size\n")
+        assert self._rules(src) == []
+        # Non-separable heuristics may read anything.
+        src = ("class H(Heuristic):\n"
+               "    separable = False\n"
+               "    def key(self, rt, s):\n"
+               "        return s.last_access\n")
+        assert self._rules(src) == []
+
+    def test_suppression_comment(self):
+        src = "json.dump(x, f)  # repro-lint: allow[strict-json]\n"
+        assert self._rules(src) == []
+        src = ("# repro-lint: allow[strict-json]\n"
+               "json.dump(x, f)\n")
+        assert self._rules(src) == []
+        # A suppression names its rule; others still fire.
+        src = "json.dump(x, f)  # repro-lint: allow[setattr-bypass]\n"
+        assert self._rules(src) == ["strict-json"]
+
+    def test_syntax_error_reported_not_raised(self):
+        assert self._rules("def f(:\n") == ["syntax-error"]
+
+    def test_repo_is_lint_clean(self):
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        findings = lint_paths([os.path.join(root, "src"),
+                               os.path.join(root, "benchmarks")])
+        assert findings == [], [str(f) for f in findings]
+
+    def test_cli_lint_exit_codes(self, tmp_path):
+        from repro.check.__main__ import main
+        bad = tmp_path / "bad.py"
+        bad.write_text("json.dump(x, f)\n")
+        assert main(["--lint", str(bad)]) == 1
+        good = tmp_path / "good.py"
+        good.write_text("json.dump(x, f, allow_nan=False)\n")
+        assert main(["--lint", str(good)]) == 0
+
+
+# ---------------------------------------------------------------------------
+# 4b. Satellite regressions
+# ---------------------------------------------------------------------------
+
+class TestExceptTighteningRegressions:
+    """Unexpected errors now propagate (PR 8 `fig3_static.py` bug class)."""
+
+    def _capture(self, monkeypatch, exc):
+        import jax.numpy as jnp
+        from repro.analysis import hlo_cost
+        from repro.trace.capture import capture_jaxpr
+
+        def boom(_):
+            raise exc
+
+        monkeypatch.setattr(hlo_cost, "analyze", boom)
+        x = jnp.ones((4, 4), dtype=jnp.float32)
+        return capture_jaxpr(lambda v: v * 2.0 + 1.0, x, name="tiny",
+                             cost_model="hlo")
+
+    def test_capture_falls_back_on_expected_errors(self, monkeypatch):
+        log = self._capture(monkeypatch, RuntimeError("no backend"))
+        assert log.meta["cost_model"] == "flops"
+
+    def test_capture_propagates_unexpected_errors(self, monkeypatch):
+        with pytest.raises(KeyError):
+            self._capture(monkeypatch, KeyError("hlo parser bug"))
+
+    def test_aval_bytes_tolerates_abstract_tokens(self):
+        from repro.core.planner import _aval_bytes, _aval_elems
+
+        class Token:                        # no shape/dtype at all
+            pass
+
+        class BadDtype:
+            shape = (2, 2)
+            dtype = object()                # jnp.dtype -> TypeError
+
+        assert _aval_bytes(Token()) == 0
+        assert _aval_elems(Token()) == 0
+        assert _aval_bytes(BadDtype()) == 0
+
+    def test_aval_bytes_propagates_real_bugs(self):
+        from repro.core.planner import _aval_bytes
+
+        class Exploding:
+            @property
+            def shape(self):
+                raise ValueError("corrupted aval")
+
+        with pytest.raises(ValueError):
+            _aval_bytes(Exploding())
+
+
+class TestOffloadDropNotification:
+    """`engine.drop` writes `offloaded` through the notification hook."""
+
+    def test_unwatched_write_does_not_ping_index(self):
+        events = []
+
+        class _Index:
+            def on_storage_event(self, s, name):
+                events.append(name)
+
+        s = StorageRec(sid=0, size=8, root_tid=0)
+        s._index = _Index()
+        s.offloaded = True                   # not in _WATCHED: silent
+        assert events == []
+        s.resident = False                   # watched: must notify
+        assert events == ["resident"]
+
+    def test_drop_leaves_index_and_flags_consistent(self):
+        # Offload a storage, then kill it (refs drop to zero with dead
+        # children) so engine.drop runs with a subscribed index; the
+        # sanitizer audit proves index parity and host-tier agreement.
+        rt, (c, a, bb, d) = _sanitized_runtime(offload=True)
+        s = rt.storages[rt.tensors[a].sid]
+        rt._offload(s)
+        assert s.offloaded and rt.offload.holds(s.sid)
+        for tid in (d, bb, a):               # leaf-first: children die first
+            rt.release(tid)
+        assert not s.offloaded and not rt.offload.holds(s.sid)
+        rt.sanitizer.audit()                 # no violation
+        rt.finalize()
+
+    def test_engine_module_has_no_setattr_bypass(self):
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        path = os.path.join(root, "src", "repro", "offload", "engine.py")
+        with open(path) as f:
+            findings = lint_source(f.read(), path)
+        assert [f for f in findings if f.rule == "setattr-bypass"] == []
+
+
+class TestStrictReportWriters:
+    """Every committed report writer passes allow_nan=False (PR 6 regime)."""
+
+    def test_perf_runtime_writer_is_strict(self, tmp_path):
+        # The satellite fix: perf_runtime's json.dump must reject NaN.
+        bad = {"rows": [float("nan")]}
+        with pytest.raises(ValueError):
+            json.dumps(bad, allow_nan=False)
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        src = open(os.path.join(root, "benchmarks",
+                                "perf_runtime.py")).read()
+        findings = lint_source(src, "benchmarks/perf_runtime.py")
+        assert [f for f in findings if f.rule == "strict-json"] == []
+        assert "allow_nan=False" in src
